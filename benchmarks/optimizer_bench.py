@@ -1,0 +1,86 @@
+"""Optimizer micro-benchmark: per-step overhead of SGD / LARS / LAMB
+(and the fused-Pallas LARS path) over realistic parameter pytrees.
+
+The paper's §6 'challenges' are optimizer-side overheads in SystemML
+(per-layer norm passes in the runtime). Here we quantify the analogous
+JAX-side cost: LARS adds two norm reductions + a broadcast per leaf over
+SGD; the fused kernel path collapses the 5-pass update into 2 passes.
+
+Usage: PYTHONPATH=src python -m benchmarks.optimizer_bench [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adamw, lamb, lars, sgd
+
+
+def make_tree(n_layers: int, d: int, key) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": jax.random.normal(ks[0], (512, d), jnp.float32) * 0.02,
+        "layers": {
+            "wq": jax.random.normal(ks[1], (n_layers, d, d), jnp.float32),
+            "wi": jax.random.normal(ks[2], (n_layers, d, 4 * d), jnp.float32),
+            "scale": jnp.ones((n_layers, d), jnp.float32),
+        },
+        "unembed": jax.random.normal(ks[3], (d, 512), jnp.float32) * 0.02,
+    }
+
+
+STACKED = {"embed": False,
+           "layers": {"wq": True, "wi": True, "scale": True},
+           "unembed": False}
+
+
+def bench(opt, params, stacked, *, iters: int) -> float:
+    grads = jax.tree_util.tree_map(lambda p: 0.01 * p, params)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(g, s, p):
+        return opt.update(g, s, p, stacked=stacked)
+
+    p, s = step(grads, state, params)  # compile + warmup
+    jax.block_until_ready(p)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        p, s = step(grads, s, p)
+    jax.block_until_ready(p)
+    return (time.perf_counter() - t0) / iters
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    n_layers, d = (4, 128) if args.quick else (16, 512)
+    iters = 5 if args.quick else 20
+
+    params = make_tree(n_layers, d, jax.random.key(0))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"# optimizer bench: {n:,} params, {iters} iters")
+    rows = []
+    for name, opt in [
+        ("sgd", sgd(0.01, momentum=0.9)),
+        ("lars", lars(0.01)),
+        ("lars+pallas", lars(0.01, use_pallas=True)),
+        ("lamb", lamb(0.001)),
+        ("adamw", adamw(0.001)),
+    ]:
+        dt = bench(opt, params, STACKED, iters=iters)
+        rows.append((name, dt))
+        print(f"{name:12s} {dt*1e3:8.2f} ms/step "
+              f"({n / dt / 1e9:6.2f} Gparam/s)", flush=True)
+    base = dict(rows)["sgd"]
+    print(f"LARS overhead vs SGD: "
+          f"{(dict(rows)['lars'] / base - 1) * 100:+.1f}%")
+
+
+if __name__ == "__main__":
+    main()

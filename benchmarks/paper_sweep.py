@@ -1,0 +1,159 @@
+"""Paper Figs. 2/3/4: SGD vs LARS across a batch-size sweep on the
+paper's CNN (§3.1) — test accuracy, train accuracy, generalization error.
+
+Protocol (paper §4): fixed hyperparameters (Table 1) across the sweep,
+fixed epoch budget, batch size scaled up until the optimizers separate.
+The dataset is the procedural MNIST stand-in (offline container;
+DESIGN.md §9), so absolute numbers differ from the paper's MNIST, and the
+claims validated are the paper's *shape*:
+
+  C1 both optimizers are comparable at small batch;
+  C2 SGD's test accuracy collapses beyond a batch threshold;
+  C3 LARS holds materially higher accuracy at large batch;
+  C4 generalization error grows much faster for SGD than LARS.
+
+Usage: PYTHONPATH=src python -m benchmarks.paper_sweep [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import lars, sgd, lamb
+from repro.core.scaling import scaled_lr
+from repro.data import batch_iterator, synthetic_mnist
+from repro.models import build_model
+from repro.train import (create_train_state, generalization_error,
+                         make_eval_step, make_train_step)
+
+# Paper Table 1
+INIT_LR = 0.01
+LR_DECAY = 1e-4
+WEIGHT_DECAY = 1e-4
+MOMENTUM = 0.9
+TRUST_COEF = 0.001
+
+
+def make_opt(name: str, base_lr: float, *, trust_coef: float = TRUST_COEF,
+             lr_policy: str = "none", base_batch: int = 32, batch: int = 32):
+    from repro.core import schedules
+    lr0 = scaled_lr(base_lr, base_batch, batch, lr_policy)
+    lr = schedules.inverse_time_decay(lr0, LR_DECAY)
+    if name == "sgd":
+        return sgd(lr, momentum=MOMENTUM, weight_decay=WEIGHT_DECAY)
+    if name == "lars":
+        return lars(lr, momentum=MOMENTUM, weight_decay=WEIGHT_DECAY,
+                    trust_coefficient=trust_coef)
+    if name == "lamb":
+        return lamb(lr, weight_decay=WEIGHT_DECAY)
+    raise ValueError(name)
+
+
+def run_cell(opt_name: str, batch: int, *, epochs: int, data, seed: int = 0,
+             trust_coef: float = TRUST_COEF, lr_policy: str = "none",
+             base_lr: float = INIT_LR) -> dict:
+    x_tr, y_tr, x_te, y_te = data
+    n = len(x_tr)
+    steps = max(1, math.ceil(epochs * n / batch))
+    cfg = get_config("lenet-mnist")
+    model = build_model(cfg)
+    opt = make_opt(opt_name, base_lr, trust_coef=trust_coef,
+                   lr_policy=lr_policy, batch=batch)
+    state = create_train_state(model, opt, jax.random.key(seed))
+    step = jax.jit(make_train_step(model, opt, cfg), donate_argnums=(0,))
+    eval_step = jax.jit(make_eval_step(model, cfg))
+
+    it = batch_iterator(x_tr, y_tr, batch=min(batch, n), seed=seed)
+    t0 = time.perf_counter()
+    for i in range(steps):
+        b = next(it)
+        state, metrics = step(state, {"x": jnp.asarray(b["x"]),
+                                      "y": jnp.asarray(b["y"])})
+    loss = float(metrics["loss"])
+
+    def acc_of(x, y):
+        accs = []
+        for i in range(0, len(x), 1024):
+            m = eval_step(state.params, {"x": jnp.asarray(x[i:i + 1024]),
+                                         "y": jnp.asarray(y[i:i + 1024])})
+            accs.append(float(m["accuracy"]) * len(x[i:i + 1024]))
+        return sum(accs) / len(x)
+
+    train_acc = acc_of(x_tr, y_tr)
+    test_acc = acc_of(x_te, y_te)
+    return {"optimizer": opt_name, "batch": batch, "steps": steps,
+            "loss": loss, "train_acc": round(train_acc, 4),
+            "test_acc": round(test_acc, 4),
+            "gen_error": round(generalization_error(train_acc, test_acc), 4),
+            "wall_s": round(time.perf_counter() - t0, 1)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny sweep for CI (seconds, not minutes)")
+    ap.add_argument("--epochs", type=int, default=None)
+    ap.add_argument("--optimizers", nargs="+",
+                    default=["sgd", "lars"])
+    ap.add_argument("--trust-coef", type=float, default=TRUST_COEF)
+    ap.add_argument("--lr-policy", default="none",
+                    choices=("none", "linear", "sqrt"))
+    ap.add_argument("--base-lr", type=float, default=INIT_LR)
+    ap.add_argument("--n-train", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.quick:
+        n_train, n_test = 2048, 512
+        batches = [64, 512, 2048]
+        epochs = args.epochs or 6
+    else:
+        n_train, n_test = 8192, 2048
+        batches = [32, 128, 512, 1024, 2048, 4096, 8192]
+        epochs = args.epochs or 20
+    if args.n_train:
+        n_train = args.n_train
+
+    data = synthetic_mnist(n_train, n_test, seed=0)
+    rows = []
+    print(f"# paper sweep: epochs={epochs} n_train={n_train} "
+          f"optimizers={args.optimizers} lr_policy={args.lr_policy} "
+          f"trust_coef={args.trust_coef}")
+    print(f"{'opt':6s} {'batch':>6s} {'steps':>6s} {'train':>7s} "
+          f"{'test':>7s} {'gen_err':>8s} {'wall':>6s}")
+    for batch in batches:
+        for opt_name in args.optimizers:
+            row = run_cell(opt_name, batch, epochs=epochs, data=data,
+                           trust_coef=args.trust_coef,
+                           lr_policy=args.lr_policy, base_lr=args.base_lr)
+            rows.append(row)
+            print(f"{row['optimizer']:6s} {row['batch']:6d} "
+                  f"{row['steps']:6d} {row['train_acc']:7.4f} "
+                  f"{row['test_acc']:7.4f} {row['gen_error']:8.4f} "
+                  f"{row['wall_s']:5.1f}s", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {args.out}")
+
+    # claim checks (only meaningful on the full sweep)
+    if not args.quick:
+        by = {(r["optimizer"], r["batch"]): r for r in rows}
+        largest = max(b for (_, b) in by)
+        small = min(b for (_, b) in by)
+        if ("lars", largest) in by and ("sgd", largest) in by:
+            c3 = by[("lars", largest)]["test_acc"] >= \
+                by[("sgd", largest)]["test_acc"]
+            print(f"C3 (LARS >= SGD test acc at batch {largest}): {c3}")
+
+
+if __name__ == "__main__":
+    main()

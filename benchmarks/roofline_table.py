@@ -1,0 +1,48 @@
+"""Render the §Roofline table from dry-run JSONL records.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_table \
+           [--in experiments/dryrun.jsonl]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.launch import roofline as RL
+
+
+def load(path: str) -> list[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    # keep the LAST record per (arch, shape, mesh) — reruns supersede
+    dedup = {}
+    for r in rows:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="experiments/dryrun.jsonl")
+    args = ap.parse_args()
+    if not os.path.exists(args.inp):
+        print(f"(no dry-run records at {args.inp} — run "
+              f"`python -m repro.launch.dryrun --out {args.inp}` first)")
+        return
+    rows = load(args.inp)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print(RL.format_table([r for r in rows if r["mesh"] == "pod"]))
+    multi = [r for r in rows if r["mesh"] != "pod"]
+    if multi:
+        print("\n# multi-pod (compile-proof pass)")
+        print(RL.format_table(multi))
+
+
+if __name__ == "__main__":
+    main()

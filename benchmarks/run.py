@@ -1,0 +1,52 @@
+"""Benchmark harness entry point: one benchmark per paper figure/table
+plus the framework-level benches.
+
+  paper_sweep       Figs 2/3/4 — SGD vs LARS batch sweep (quick mode here;
+                    the full sweep is `python -m benchmarks.paper_sweep`)
+  optimizer_bench   optimizer step overhead (paper §6 challenges analogue)
+  kernel_bench      Pallas kernels vs jnp oracles
+  roofline_table    §Roofline from recorded dry-run JSONL
+
+`python -m benchmarks.run` runs the quick version of everything.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    print("=" * 72)
+    print("== paper_sweep (quick) — Figs 2/3/4 protocol")
+    print("=" * 72)
+    sys.argv = ["paper_sweep", "--quick"]
+    from benchmarks import paper_sweep
+    paper_sweep.main()
+
+    print()
+    print("=" * 72)
+    print("== optimizer_bench (quick)")
+    print("=" * 72)
+    sys.argv = ["optimizer_bench", "--quick"]
+    from benchmarks import optimizer_bench
+    optimizer_bench.main()
+
+    print()
+    print("=" * 72)
+    print("== kernel_bench (quick)")
+    print("=" * 72)
+    sys.argv = ["kernel_bench", "--quick"]
+    from benchmarks import kernel_bench
+    kernel_bench.main()
+
+    print()
+    print("=" * 72)
+    print("== roofline_table (from experiments/dryrun.jsonl if present)")
+    print("=" * 72)
+    sys.argv = ["roofline_table"]
+    from benchmarks import roofline_table
+    roofline_table.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""The paper's experiment, end to end: train the §3.1 CNN on (synthetic)
+MNIST at a small and a large batch size with SGD and with LARS, and
+report test/train accuracy + generalization error — a scaled-down
+version of Figs 2-4 (the full sweep is ``benchmarks/paper_sweep.py``).
+
+Run: PYTHONPATH=src python examples/large_batch_mnist.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.paper_sweep import run_cell  # noqa: E402
+from repro.data import synthetic_mnist       # noqa: E402
+
+
+def main() -> None:
+    data = synthetic_mnist(4096, 1024, seed=0)
+    print(f"{'opt':6s} {'batch':>6s} {'train':>7s} {'test':>7s} "
+          f"{'gen_err':>8s}")
+    for batch in (64, 1024):
+        for opt in ("sgd", "lars"):
+            # the validated Protocol B (EXPERIMENTS.md §Paper-validation)
+            row = run_cell(opt, batch, epochs=12, data=data,
+                           trust_coef=0.02, lr_policy="linear")
+            print(f"{row['optimizer']:6s} {row['batch']:6d} "
+                  f"{row['train_acc']:7.4f} {row['test_acc']:7.4f} "
+                  f"{row['gen_error']:8.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro: LARS/LAMB large-batch optimization as a first-class feature of a
+multi-pod JAX training/serving framework.
+
+Reproduction of "Evaluating Deep Learning in SystemML using Layer-wise
+Adaptive Rate Scaling (LARS) Optimizer" (Chowdhury et al., 2021), adapted
+from SystemML-on-Spark to JAX on TPU.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,3 @@
+"""Checkpointing: flat-path npz pytree save/restore."""
+
+from repro.checkpoint.npz import save_checkpoint, restore_checkpoint  # noqa: F401

@@ -1,0 +1,67 @@
+"""Pytree <-> npz checkpointing.
+
+Leaves are stored under their joined tree path ("params/layers/attn/wq");
+restore rebuilds into a caller-supplied target structure (so dtypes and
+shardings are re-established by the caller's device_put).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten(tree: Pytree) -> dict[str, np.ndarray]:
+    flat = {}
+
+    def key_of(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            # numpy's npz cannot round-trip ml_dtypes (bf16/f8): store as
+            # f32; restore casts back to the target leaf dtype.
+            arr = arr.astype(np.float32)
+        flat[key_of(path)] = arr
+    return flat
+
+
+def save_checkpoint(path: str, tree: Pytree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def restore_checkpoint(path: str, target: Pytree) -> Pytree:
+    """Restore into the structure of ``target`` (shape/dtype template)."""
+    with np.load(path if path.endswith(".npz") else path + ".npz") as data:
+        stored = dict(data)
+    flat_target = _flatten(target)
+    missing = set(flat_target) - set(stored)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    leaves_with_path = jax.tree_util.tree_leaves_with_path(target)
+    treedef = jax.tree_util.tree_structure(target)
+
+    def key_of(path):
+        parts = []
+        for p in path:
+            parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+        return "/".join(parts)
+
+    new_leaves = [stored[key_of(path)].astype(np.asarray(leaf).dtype)
+                  for path, leaf in leaves_with_path]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

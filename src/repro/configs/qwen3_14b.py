@@ -1,0 +1,23 @@
+"""qwen3-14b — dense LM with QK-norm GQA [hf:Qwen/Qwen3-8B family].
+
+40L, d_model=5120, 40H (GQA kv=8, head_dim=128), d_ff=17408,
+vocab=151936, qk_norm, no QKV bias.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-14b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=17408,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1000000.0,
+    act="silu",
+    source="hf:Qwen/Qwen3-8B",
+)

@@ -1,0 +1,24 @@
+"""smollm-135m — small llama-arch dense LM
+[hf:HuggingFaceTB/SmolLM-135M].
+
+30L, d_model=576, 9H (GQA kv=3), d_ff=1536, vocab=49152, tied embeddings.
+Also the ~100M-class model used by examples/train_lm.py for the real
+CPU-scale end-to-end training run.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m",
+    family="dense",
+    num_layers=30,
+    d_model=576,
+    num_heads=9,
+    num_kv_heads=3,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=49152,
+    tie_embeddings=True,
+    act="silu",
+    source="hf:HuggingFaceTB/SmolLM-135M",
+)

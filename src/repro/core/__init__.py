@@ -1,0 +1,26 @@
+"""Core contribution: layer-wise adaptive-rate optimizers for large-batch
+distributed training (LARS — the paper's technique; SGD — the paper's
+baseline; LAMB — the paper's stated future work), plus LR schedules and
+large-batch scaling policies.
+"""
+
+from repro.core.optim_base import Optimizer, OptState, apply_updates  # noqa: F401
+from repro.core.sgd import sgd  # noqa: F401
+from repro.core.lars import lars  # noqa: F401
+from repro.core.lamb import lamb  # noqa: F401
+from repro.core.adamw import adamw  # noqa: F401
+from repro.core import schedules, scaling, trust_ratio, grad_stats  # noqa: F401
+
+OPTIMIZERS = {
+    "sgd": sgd,
+    "lars": lars,
+    "lamb": lamb,
+    "adamw": adamw,
+}
+
+
+def get_optimizer(name: str, **kwargs):
+    """Build an optimizer by name (config-system entry point)."""
+    if name not in OPTIMIZERS:
+        raise ValueError(f"unknown optimizer {name!r}; have {sorted(OPTIMIZERS)}")
+    return OPTIMIZERS[name](**kwargs)

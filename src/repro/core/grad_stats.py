@@ -1,0 +1,54 @@
+"""Per-layer norm / trust-ratio telemetry.
+
+The LARS paper's key diagnostic (and this paper's §3.2 argument) is that
+||w||/||g|| varies wildly across layers. This module computes that table
+inside a jitted step so training loops can log it cheaply.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import trust_ratio as tr
+from repro.core.optim_base import normalize_stacked
+
+Pytree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def layer_stats(params: Pytree, grads: Pytree, *,
+                eta: float = 0.001, weight_decay: float = 1e-4,
+                stacked: Optional[Pytree] = None) -> dict[str, dict[str, jnp.ndarray]]:
+    """{layer_path: {w_norm, g_norm, ratio_wg, trust_ratio}} (per-slice for
+    stacked leaves: entries are vectors of length L)."""
+    stacked_full = normalize_stacked(params, stacked)
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_s = jax.tree_util.tree_leaves(stacked_full)
+
+    out: dict[str, dict[str, jnp.ndarray]] = {}
+    for (path, w), g, s in zip(flat_p, flat_g, flat_s):
+        w_norm, g_norm = tr.layer_norms(w, g, s)
+        trust = tr.lars_trust_ratio(w_norm, g_norm, eta=eta,
+                                    weight_decay=weight_decay)
+        out[_path_str(path)] = {
+            "w_norm": w_norm,
+            "g_norm": g_norm,
+            "ratio_wg": w_norm / (g_norm + 1e-12),
+            "trust_ratio": trust,
+        }
+    return out

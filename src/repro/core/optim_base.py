@@ -1,0 +1,92 @@
+"""Optimizer protocol shared by SGD / LARS / LAMB / AdamW.
+
+Design notes
+------------
+* Pure-JAX, optax-free (the container ships no optax, and the point of the
+  repo is the optimizer *as the paper's contribution*).
+* ``Optimizer.init(params) -> OptState``; ``Optimizer.update(grads, state,
+  params, stacked=None) -> (new_params, new_state)``. The update is a single
+  jit-able function of pytrees; the step counter lives in the state so LR
+  schedules are pure.
+* ``stacked``: a pytree of bools mirroring ``params`` (or a prefix thereof).
+  ``True`` marks a parameter whose leading axis stacks layers for
+  ``lax.scan`` (shape ``(L, ...)``). Layer-wise optimizers (LARS/LAMB) must
+  compute their trust ratios *per leading index* for such tensors, otherwise
+  the "layer-wise" semantics of the paper silently degrade to
+  "whole-stack-wise". Non-layer-wise optimizers ignore it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> learning rate
+
+
+class OptState(NamedTuple):
+    """Generic optimizer state: step counter + per-optimizer slot pytrees."""
+
+    step: jnp.ndarray          # scalar int32
+    slots: dict[str, Pytree]   # e.g. {"momentum": ..., "nu": ...}
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """A named pair of pure functions (init, update)."""
+
+    name: str
+    init: Callable[[Pytree], OptState]
+    update: Callable[..., tuple[Pytree, OptState]]
+    # Hyperparameters for introspection / experiment logging.
+    hyperparams: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __repr__(self) -> str:  # keep experiment logs readable
+        hp = ", ".join(f"{k}={v}" for k, v in self.hyperparams.items()
+                       if not callable(v))
+        return f"Optimizer({self.name}, {hp})"
+
+
+def as_schedule(lr: float | Schedule) -> Schedule:
+    """Promote a constant learning rate to a schedule."""
+    if callable(lr):
+        return lr
+    lr = float(lr)
+    return lambda step: jnp.asarray(lr, dtype=jnp.float32)
+
+
+def zeros_like_tree(params: Pytree, dtype=jnp.float32) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, dtype=dtype), params)
+
+
+def normalize_stacked(params: Pytree, stacked: Optional[Pytree]) -> Pytree:
+    """Return a full bool pytree mirroring params (default: all False)."""
+    if stacked is None:
+        return jax.tree_util.tree_map(lambda _: False, params)
+    # Broadcast a prefix tree of bools over params.
+    return jax.tree_util.tree_map(
+        lambda s, p: bool(s), stacked, params)
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    """w <- w + u, preserving each param's dtype (updates are f32)."""
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)
+
+
+def tree_cast(tree: Pytree, dtype) -> Pytree:
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    """sqrt(sum of squared L2 norms) across a whole pytree (telemetry)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))

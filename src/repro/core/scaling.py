@@ -1,0 +1,29 @@
+"""Large-batch LR scaling policies.
+
+The paper's whole premise (§1) is scaling the batch without losing test
+accuracy. Two standard policies connect a tuned (base_lr, base_batch)
+pair to a target global batch:
+
+* linear  (Goyal et al.): lr = base_lr * batch / base_batch   — SGD regime
+* sqrt    (You et al.):   lr = base_lr * sqrt(batch / base_batch) — LARS/LAMB
+
+``scaled_lr`` is the config-system entry point; the benchmark harness uses
+it to hold the effective per-example step size comparable across the sweep.
+"""
+
+from __future__ import annotations
+
+import math
+
+POLICIES = ("none", "linear", "sqrt")
+
+
+def scaled_lr(base_lr: float, base_batch: int, batch: int,
+              policy: str = "linear") -> float:
+    if policy == "none":
+        return base_lr
+    if policy == "linear":
+        return base_lr * batch / base_batch
+    if policy == "sqrt":
+        return base_lr * math.sqrt(batch / base_batch)
+    raise ValueError(f"unknown scaling policy {policy!r}; have {POLICIES}")

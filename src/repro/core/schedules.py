@@ -1,0 +1,67 @@
+"""Learning-rate schedules.
+
+The paper (Table 1) uses initial LR 0.01 with "Learning rate Decay 0.0001"
+— the SystemML/Caffe-style inverse-time decay ``lr_t = lr0 / (1 + k*t)``.
+The LARS paper pairs large batches with *warmup + polynomial decay*; we
+provide both, plus the usual cosine / step schedules, and warmup as a
+combinator so any schedule can be prefixed with it (the "learning rate
+warm-up" approach the paper discusses in §3.2).
+
+All schedules are ``step -> f32 scalar`` pure functions of a traced step.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def inverse_time_decay(lr0: float, decay: float = 1e-4) -> Schedule:
+    """Paper Table 1: lr_t = lr0 / (1 + decay * t)."""
+    def fn(step):
+        return jnp.asarray(lr0, jnp.float32) / (1.0 + decay * step.astype(jnp.float32))
+    return fn
+
+
+def step_decay(lr0: float, drop: float = 0.1, every: int = 1000) -> Schedule:
+    def fn(step):
+        k = (step // every).astype(jnp.float32)
+        return jnp.asarray(lr0, jnp.float32) * jnp.power(drop, k)
+    return fn
+
+
+def polynomial_decay(lr0: float, total_steps: int, power: float = 2.0,
+                     lr_end: float = 0.0) -> Schedule:
+    """LARS-paper style poly decay: lr = (lr0-end)*(1 - t/T)^p + end."""
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return (lr0 - lr_end) * jnp.power(1.0 - frac, power) + lr_end
+    return fn
+
+
+def cosine_decay(lr0: float, total_steps: int, lr_end: float = 0.0) -> Schedule:
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return lr_end + 0.5 * (lr0 - lr_end) * (1.0 + jnp.cos(jnp.pi * frac))
+    return fn
+
+
+def with_warmup(schedule: Schedule, warmup_steps: int) -> Schedule:
+    """Linear warmup from 0 into ``schedule`` (offset so schedule sees t=0
+    at the end of warmup). The §3.2 'learning rate warm-up' approach."""
+    if warmup_steps <= 0:
+        return schedule
+
+    def fn(step):
+        t = step.astype(jnp.float32)
+        target = schedule(jnp.maximum(step - warmup_steps, 0))
+        warm = schedule(jnp.zeros_like(step)) * (t + 1.0) / warmup_steps
+        return jnp.where(t < warmup_steps, warm, target)
+    return fn

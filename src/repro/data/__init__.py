@@ -1,0 +1,8 @@
+"""Data pipeline: synthetic MNIST (the paper's dataset, rendered
+procedurally since the container is offline), synthetic token-LM data,
+and a sharding-aware host loader.
+"""
+
+from repro.data.mnist import synthetic_mnist  # noqa: F401
+from repro.data.tokens import token_batches, TokenTaskConfig  # noqa: F401
+from repro.data.loader import ShardedLoader, batch_iterator  # noqa: F401

@@ -1,0 +1,6 @@
+"""Distribution layer: logical sharding rules per architecture family,
+mesh helpers, and NamedSharding builders for params / batches / caches."""
+
+from repro.distributed.sharding import (param_pspecs, batch_pspecs,  # noqa: F401
+                                        cache_pspecs, state_pspecs,
+                                        named, tree_named)

@@ -1,0 +1,102 @@
+"""Flash-decode: single-token GQA attention over a blocked KV cache.
+
+The decode hot path (serve_step) computes attention of ONE query token per
+sequence against a cache of up to 524288 keys. On TPU the bottleneck is
+streaming the cache through VMEM exactly once; this kernel does the
+classic online-softmax accumulation over KV blocks so no (S,)-sized
+intermediate ever materializes.
+
+Grid: (B, Hkv, S/bs) — the S axis is innermost so the running
+(max, denom, acc) state lives in VMEM scratch across blocks of one
+(batch, kv-head) pair and is finalized on the last block.
+
+Blocks:
+  q   (1, 1, G, D)   — the G query heads sharing this kv head
+  k/v (1, bs, 1, D)  — one KV block
+  out (1, 1, G, D)
+
+VMEM working set ~ bs*D*4B*2 (K,V) + G*bs*4 (scores) + small state; with
+bs=512, D=128, G<=8 that is ~600 KB — comfortable with double buffering.
+Per-sequence valid lengths mask the tail (cache is a ring of capacity S).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, bs: int):
+    j = pl.program_id(2)
+    n_blocks = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+    k = k_ref[:, :, 0, :][0].astype(jnp.float32)  # (bs, D)
+    v = v_ref[:, :, 0, :][0].astype(jnp.float32)  # (bs, D)
+    length = len_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < length
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new) * valid.astype(jnp.float32)   # (G, bs)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_decode_grouped(q4: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         lengths2: jnp.ndarray, *, scale: float,
+                         bs: int = 512, interpret: bool = True
+                         ) -> jnp.ndarray:
+    """q4: (B, Hkv, G, D); k/v: (B, S, Hkv, D); lengths2: (B, 1) int32.
+
+    Returns (B, Hkv, G, D) attention output in q4.dtype.
+    """
+    B, Hkv, G, D = q4.shape
+    S = k.shape[1]
+    assert S % bs == 0, (S, bs)
+    grid = (B, Hkv, S // bs)
+    kern = functools.partial(_decode_kernel, scale=scale, bs=bs)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),          # lengths
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),   # q
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, j: (b, j, h, 0)),  # k
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, j: (b, j, h, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q4.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # running max
+            pltpu.VMEM((G, 1), jnp.float32),   # running denom
+            pltpu.VMEM((G, D), jnp.float32),   # running acc
+        ],
+        interpret=interpret,
+    )(lengths2, q4, k, v)

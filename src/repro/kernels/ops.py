@@ -1,0 +1,115 @@
+"""Jit-ready public wrappers around the Pallas kernels.
+
+Responsibilities:
+  * pack arbitrary parameter leaves into the kernels' (L, M, C) layout
+    (pad with zeros — norms are unaffected; padded lanes are sliced away
+    after apply);
+  * pick interpret mode (CPU container -> interpret=True; real TPU ->
+    compiled kernel);
+  * expose the same signatures as :mod:`repro.kernels.ref` so the
+    optimizer can swap implementations freely.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import lars_kernels, flash_decode as fd
+
+LANE = 512     # packed lane dim (multiple of 128)
+BM = 8         # sublane rows per block
+
+
+@functools.cache
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------------- packing
+
+def _pack(x: jnp.ndarray, stacked: bool) -> tuple[jnp.ndarray, int]:
+    """Reshape/pad a leaf to (L, M, LANE) with M % BM == 0.
+
+    Returns (packed, n) where n is the original per-slice element count.
+    """
+    L = x.shape[0] if stacked else 1
+    flat = x.reshape(L, -1)
+    n = flat.shape[1]
+    per_tile = LANE * BM
+    n_pad = int(np.ceil(n / per_tile)) * per_tile
+    if n_pad != n:
+        flat = jnp.pad(flat, ((0, 0), (0, n_pad - n)))
+    return flat.reshape(L, n_pad // LANE, LANE), n
+
+
+def _unpack(x3: jnp.ndarray, n: int, shape, stacked: bool) -> jnp.ndarray:
+    L = x3.shape[0]
+    flat = x3.reshape(L, -1)[:, :n]
+    return flat.reshape(shape)
+
+
+# ------------------------------------------------------------------- kernels
+
+def lars_norms(w: jnp.ndarray, g: jnp.ndarray, *, stacked: bool = False
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Joint (||w||, ||g||); () or (L,) f32. Pallas-fused single pass."""
+    w3, _ = _pack(w, stacked)
+    g3, _ = _pack(g, stacked)
+    wsq, gsq = lars_kernels.lars_norms_packed(w3, g3, bm=BM,
+                                              interpret=_interpret())
+    w_norm, g_norm = jnp.sqrt(wsq), jnp.sqrt(gsq)
+    if not stacked:
+        return w_norm[0], g_norm[0]
+    return w_norm, g_norm
+
+
+def lars_apply(w: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray, *,
+               local_lr, momentum: float, weight_decay: float
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused m' = mu*m + lr*(g + wd*w); w' = w - m'.
+
+    ``local_lr``: scalar (unstacked leaf) or (L,) vector (stacked leaf —
+    detected from its shape).
+    """
+    lr = jnp.asarray(local_lr, jnp.float32)
+    # A (L>1,) lr vector implies a stacked leaf. (L==1 packs identically
+    # either way, so size-based inference is exact.)
+    stacked = bool(lr.size > 1)
+    w3, n = _pack(w, stacked)
+    g3, _ = _pack(g, stacked)
+    m3, _ = _pack(m, stacked)
+    L = w3.shape[0]
+    lr2 = jnp.broadcast_to(lr.reshape(-1, 1), (L, 1)).astype(jnp.float32)
+    w_new3, m_new3 = lars_kernels.lars_apply_packed(
+        w3, g3, m3, lr2, momentum=momentum, weight_decay=weight_decay,
+        bm=BM, interpret=_interpret())
+    return (_unpack(w_new3, n, w.shape, stacked),
+            _unpack(m_new3, n, m.shape, stacked))
+
+
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 lengths: jnp.ndarray, *, scale: float | None = None,
+                 block_size: int = 512) -> jnp.ndarray:
+    """Single-token decode attention. q (B,H,D); k/v (B,S,Hkv,D);
+    lengths (B,) int32. Returns (B,H,D)."""
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0, (H, Hkv)
+    G = H // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    bs = min(block_size, S)
+    if S % bs != 0:  # pad cache tail; masked out by lengths
+        pad = bs - S % bs
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    q4 = q.reshape(B, Hkv, G, D)
+    out4 = fd.flash_decode_grouped(q4, k, v,
+                                   lengths.reshape(B, 1).astype(jnp.int32),
+                                   scale=scale, bs=bs,
+                                   interpret=_interpret())
+    return out4.reshape(B, H, D)

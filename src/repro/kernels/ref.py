@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's sweep test asserts
+``assert_allclose(kernel(...), ref(...))`` across shapes and dtypes.
+They are also the fallback implementation used under `pjit` when leaves
+are sharded (XLA then fuses/reduces across shards itself).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lars_norms(w: jnp.ndarray, g: jnp.ndarray, *, stacked: bool = False
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Joint (||w||, ||g||) in f32; per leading slice when stacked."""
+    axes = tuple(range(1, w.ndim)) if stacked else tuple(range(w.ndim))
+    wf = w.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    return (jnp.sqrt(jnp.sum(jnp.square(wf), axis=axes)),
+            jnp.sqrt(jnp.sum(jnp.square(gf), axis=axes)))
+
+
+def lars_apply(w: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray, *,
+               local_lr, momentum: float, weight_decay: float
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused momentum + decay + apply.
+
+    m_new = momentum*m + local_lr*(g + wd*w);  w_new = w - m_new.
+    ``local_lr`` is a scalar, or a (L,) vector broadcast against a stacked
+    (L, ...) leaf.
+    """
+    wf = w.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    lr = jnp.asarray(local_lr, jnp.float32)
+    if lr.ndim > 0 and lr.ndim != wf.ndim:
+        lr = lr.reshape(lr.shape + (1,) * (wf.ndim - lr.ndim))
+    m_new = momentum * m.astype(jnp.float32) + lr * (gf + weight_decay * wf)
+    w_new = wf - m_new
+    return w_new.astype(w.dtype), m_new
+
+
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 lengths: jnp.ndarray, *, scale: float | None = None
+                 ) -> jnp.ndarray:
+    """Single-token decode attention with per-sequence valid lengths.
+
+    q: (B, H, D); k/v: (B, S, Hkv, D); lengths: (B,) int32 — positions
+    >= length are masked. GQA: H = G * Hkv. Returns (B, H, D) in q.dtype.
+    """
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    kf = k.astype(jnp.float32)   # (B, S, Hkv, D)
+    vf = v.astype(jnp.float32)
+    # scores: (B, Hkv, G, S)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, kf) * scale
+    pos = jnp.arange(S)[None, None, None, :]
+    mask = pos < lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = _softmax(scores)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def _softmax(x: jnp.ndarray) -> jnp.ndarray:
+    m = jnp.max(x, axis=-1, keepdims=True)
+    # guard fully-masked rows (all -inf): exp(-inf - -inf) -> nan; shift by 0
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(x - m)
+    return e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)

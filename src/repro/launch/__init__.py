@@ -1,0 +1,2 @@
+"""Launcher layer: production mesh, input specs, multi-pod dry-run,
+roofline analysis, and the train/serve entry points."""

@@ -1,0 +1,78 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""§Perf hillclimb driver: re-lower one (arch x shape) pair with config
+overrides and print the roofline delta vs baseline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch qwen2-72b \
+      --shape train_4k --set flash_vjp=true --set attn_q_chunk=2048
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+
+from repro.launch.dryrun import lower_pair       # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import roofline as RL          # noqa: E402
+
+
+def parse_val(v: str):
+    if v.lower() in ("true", "false"):
+        return v.lower() == "true"
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="FIELD=VALUE")
+    ap.add_argument("--optimizer", default="lars",
+                    choices=("lars", "lamb", "sgd", "adamw"))
+    ap.add_argument("--baseline", action="store_true",
+                    help="also (re)compute the no-override baseline")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args()
+
+    overrides = {}
+    for s in args.set:
+        k, v = s.split("=", 1)
+        overrides[k] = parse_val(v)
+
+    mesh = make_production_mesh()
+    rows = []
+    if args.baseline:
+        rows.append(("baseline", lower_pair(
+            args.arch, args.shape, mesh, "pod", probe=not args.no_probe)))
+    tag = ",".join(args.set + ([f"opt={args.optimizer}"]
+                               if args.optimizer != "lars" else [])) \
+        or "baseline"
+    rows.append((tag, lower_pair(
+        args.arch, args.shape, mesh, "pod", probe=not args.no_probe,
+        overrides=overrides, optimizer=args.optimizer)))
+
+    print()
+    for tag, r in rows:
+        print(f"{tag:40s} t=({RL.fmt_seconds(r['t_compute_s'])}, "
+              f"{RL.fmt_seconds(r['t_memory_s'])}, "
+              f"{RL.fmt_seconds(r['t_collective_s'])}) dom={r['dominant']} "
+              f"mem/dev={RL.fmt_bytes(r['peak_memory_bytes_per_device'])}")
+    if args.out:
+        with open(args.out, "a") as f:
+            for tag, r in rows:
+                r = dict(r, overrides=tag)
+                f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

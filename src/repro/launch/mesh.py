@@ -1,0 +1,37 @@
+"""Production mesh definition (TPU v5e target).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (smoke tests must see 1 CPU device; only
+dryrun.py sets the 512-host-device XLA flag).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips — the ``pod`` axis
+    carries pure data parallelism (per-step gradient all-reduce only).
+
+    When the process exposes more devices than the mesh needs (the
+    512-host-device dry-run lowering a single-pod mesh), the mesh takes
+    the leading subset."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {dict(zip(axes, shape))}, have "
+            f"{len(devs)} — run under dryrun.py (XLA host-device flag)")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_host_mesh(*, model: int = 1):
+    """Degenerate mesh over the local device(s) — examples / smoke runs."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,181 @@
+"""Roofline analysis from the compiled dry-run artifact (no hardware).
+
+Three terms per (arch x shape x mesh), TPU v5e constants:
+
+  compute    = HLO_FLOPs_total   / (chips * 197e12 FLOP/s bf16)
+  memory     = HLO_bytes_total   / (chips * 819e9  B/s HBM)
+  collective = wire_bytes_total  / (chips * 50e9   B/s ICI per link)
+
+``compiled.cost_analysis()`` is PER-DEVICE (the SPMD module is the
+per-device program), so totals are per-device * chips — the chips cancel
+for compute/memory and the terms are effectively per-device seconds.
+
+Collective bytes are NOT in cost_analysis: we parse the compiled HLO and
+sum result-shape sizes of every all-reduce / all-gather / reduce-scatter
+/ all-to-all / collective-permute (async -start variants counted once,
+-done ignored). Wire-byte convention: all-reduce counts 2x (ring
+reduce-scatter + all-gather), everything else 1x. These are per-device
+shapes, so the collective term is per-device seconds over one link —
+consistent with the other two terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9             # B/s per chip
+ICI_BW = 50e9              # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shapes_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, int]:
+    """Per-op-type result bytes from an HLO dump (per-device shapes)."""
+    out: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        out[op] = out.get(op, 0) + _shape_bytes(shapes)
+    return out
+
+
+def wire_bytes(coll: dict[str, int]) -> int:
+    """Ring-convention bytes on the wire (all-reduce counts 2x)."""
+    return sum(b * (2 if op == "all-reduce" else 1)
+               for op, b in coll.items())
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: int          # per-device result bytes, by convention
+    per_type: dict
+    model_flops: float             # 6 * N_active * tokens (global)
+    peak_memory_bytes: Optional[float] = None   # per-device, if available
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return wire_bytes(self.per_type) / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_total = self.flops_per_device * self.chips
+        return self.model_flops / hlo_total if hlo_total else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_total": self.flops_per_device * self.chips,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "collective_bytes_by_type": self.per_type,
+            "peak_memory_bytes_per_device": self.peak_memory_bytes,
+        }
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops: float) -> Roofline:
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    per_type = parse_collectives(hlo)
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            peak = float(ma.temp_size_in_bytes + ma.argument_size_in_bytes
+                         + ma.output_size_in_bytes
+                         - ma.alias_size_in_bytes)
+    except Exception:
+        pass
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    flops_per_device=flops, bytes_per_device=byts,
+                    collective_bytes=sum(per_type.values()),
+                    per_type=per_type, model_flops=model_flops,
+                    peak_memory_bytes=peak)
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.2f}ms"
+    return f"{s*1e6:.1f}us"
+
+
+def fmt_bytes(b: Optional[float]) -> str:
+    if b is None:
+        return "n/a"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if b < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':6s} "
+           f"{'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} "
+           f"{'dominant':10s} {'useful':>7s} {'mem/dev':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
+            f"{fmt_seconds(r['t_compute_s']):>9s} "
+            f"{fmt_seconds(r['t_memory_s']):>9s} "
+            f"{fmt_seconds(r['t_collective_s']):>9s} "
+            f"{r['dominant']:10s} "
+            f"{r['useful_flops_ratio']*100:6.1f}% "
+            f"{fmt_bytes(r['peak_memory_bytes_per_device']):>9s}")
+    return "\n".join(lines)

@@ -1,0 +1,121 @@
+"""Training entry point: ``--arch`` selects any registered config; runs a
+real (CPU-scale or TPU) training job with the LARS/LAMB/SGD optimizers.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --reduced --steps 50 --batch 32 --seq 64 --optimizer lars
+  PYTHONPATH=src python -m repro.launch.train --arch lenet-mnist \
+      --steps 200 --batch 512 --optimizer lars --lr 0.02
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCHS, get_config
+from repro.core import get_optimizer, schedules
+from repro.data import TokenTaskConfig, batch_iterator, synthetic_mnist, \
+    token_batches
+from repro.models import build_model
+from repro.train import (create_train_state, make_eval_step, make_train_step,
+                         train_loop)
+
+
+def lm_batches(cfg, batch: int, seq: int, seed: int = 0):
+    task = TokenTaskConfig(vocab_size=min(cfg.vocab_size, 512), seed=seed)
+    for toks in token_batches(task, batch=batch, seq_len=seq, seed=seed):
+        b = {"tokens": jnp.asarray(toks[:, :seq])}
+        if cfg.family == "encdec":
+            b["frames"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model),
+                                    jnp.float32)
+        if cfg.family == "vlm":
+            b["image_embeddings"] = jnp.zeros(
+                (batch, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+        yield b
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (CPU-scale) variant")
+    ap.add_argument("--optimizer", default="lars",
+                    choices=("lars", "lamb", "sgd", "adamw"))
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--warmup", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="FIELD=VALUE",
+                    help="config override, e.g. --set remat_block=8")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.set:
+        import dataclasses
+
+        def parse_val(v):   # (not hillclimb's — importing it would set
+            if v.lower() in ("true", "false"):   # the 512-device flag)
+                return v.lower() == "true"
+            for t in (int, float):
+                try:
+                    return t(v)
+                except ValueError:
+                    pass
+            return v
+
+        cfg = dataclasses.replace(
+            cfg, **{k: parse_val(v) for k, v in
+                    (s.split("=", 1) for s in args.set)})
+    model = build_model(cfg)
+
+    lr = schedules.with_warmup(schedules.constant(args.lr), args.warmup)
+    opt = get_optimizer(args.optimizer, learning_rate=lr)
+    state = create_train_state(model, opt, jax.random.key(args.seed))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(state.params))
+    print(f"arch={cfg.name} family={cfg.family} params={n_params:,} "
+          f"opt={opt.name} lr={args.lr}")
+
+    if cfg.family == "cnn":
+        x_tr, y_tr, x_te, y_te = synthetic_mnist()
+        batches = ({"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+                   for b in batch_iterator(x_tr, y_tr, batch=args.batch,
+                                           seed=args.seed))
+        eval_batches = [{"x": jnp.asarray(x_te[i:i + 256]),
+                         "y": jnp.asarray(y_te[i:i + 256])}
+                        for i in range(0, len(x_te), 256)]
+    else:
+        batches = lm_batches(cfg, args.batch, args.seq, args.seed)
+        eval_batches = None
+
+    step = make_train_step(model, opt, cfg)
+    t0 = time.perf_counter()
+    state, hist = train_loop(step, state, batches, args.steps,
+                             log_every=args.log_every,
+                             eval_fn=make_eval_step(model, cfg)
+                             if eval_batches else None,
+                             eval_batches=eval_batches)
+    dt = time.perf_counter() - t0
+    print(f"done: {args.steps} steps in {dt:.1f}s "
+          f"({args.steps / dt:.2f} steps/s)")
+    if hist and "eval_accuracy" in hist[-1]:
+        print(f"eval accuracy: {hist[-1]['eval_accuracy']:.4f}")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, state.params)
+        print(f"checkpoint -> {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Model zoo: pure-JAX (init_fn, apply_fn) definitions for every assigned
+architecture family, built from shared blocks. No flax — params are plain
+nested dicts; stacked (scan) leaves carry a parallel bool marker tree used
+by the layer-wise optimizers.
+"""
+
+from repro.models.lm import LanguageModel  # noqa: F401
+from repro.models.encdec import EncDecModel  # noqa: F401
+from repro.models.lenet import LeNet  # noqa: F401
+
+
+def build_model(cfg):
+    """Config -> model object with init/forward/prefill/decode_step."""
+    if cfg.family == "cnn":
+        return LeNet(cfg)
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    return LanguageModel(cfg)

@@ -1,0 +1,263 @@
+"""GQA/MHA/MQA attention: blockwise (online-softmax) jnp core + projections.
+
+The blockwise core scans over KV chunks so no (S, S) score matrix ever
+materializes — this is the memory-efficient formulation that makes the
+32k-prefill and 4k-train shapes fit per-device HBM under remat, and it is
+exactly the algorithm the Pallas ``flash_decode`` kernel implements for
+the 1-token decode case (kernel used on real TPU; this jnp path is the
+oracle and the `pjit`-friendly default).
+
+Mask model (one code path for all families):
+  allowed(qp, kp) = [kp <= qp  (causal)
+                     OR (qp < prefix_len AND kp < prefix_len)  (prefix-LM)
+                     OR not causal (encoder)]
+                    AND (window == 0 OR kp > qp - window)
+                    AND kp < kv_valid_len
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+NEG_INF = -1.0e30
+
+
+def init_attention(key, cfg, d: int, dtype) -> dict:
+    H, Hkv, hd = cfg.attn_dims
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d, H * hd, dtype),
+        "wk": L.dense_init(ks[1], d, Hkv * hd, dtype),
+        "wv": L.dense_init(ks[2], d, Hkv * hd, dtype),
+        "wo": L.dense_init(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((Hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((Hkv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def qkv_project(cfg, p, x, positions, *, rope: bool = True):
+    """x (B,S,d) -> q (B,S,H,hd), k/v (B,S,Hkv,hd) with rope + qk_norm."""
+    H, Hkv, hd = cfg.attn_dims
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if rope and cfg.use_rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _block_mask(qp, kp, *, causal, window, prefix_len, kv_len):
+    """(..., Sq, Kc) bool. qp (..., Sq), kp (Kc,) absolute positions."""
+    qp = qp[..., :, None]
+    kp_b = kp[None, :]
+    if causal:
+        ok = kp_b <= qp
+        if prefix_len is not None:
+            pl_ = prefix_len if jnp.ndim(prefix_len) == 0 else prefix_len[..., None, None]
+            ok = ok | ((qp < pl_) & (kp_b < pl_))
+    else:
+        ok = jnp.ones(jnp.broadcast_shapes(qp.shape, kp_b.shape), bool)
+    if window:
+        ok = ok & (kp_b > qp - window)
+    if kv_len is not None:
+        kvl = kv_len if jnp.ndim(kv_len) == 0 else kv_len[..., None, None]
+        ok = ok & (kp_b < kvl)
+    return ok
+
+
+def attention_core(q, k, v, *, q_positions, kv_positions=None,
+                   causal: bool = True, window: int = 0,
+                   prefix_len=None, kv_len=None,
+                   kv_chunk: int = 1024, scale: Optional[float] = None,
+                   softcap: float = 0.0, q_chunk: int = 0,
+                   flash_vjp: bool = False) -> jnp.ndarray:
+    """Online-softmax attention, scanned over KV chunks.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D). q_positions: (Sq,) or (B, Sq).
+    Returns (B, Sq, H, D) in q.dtype; accumulation in f32.
+
+    ``q_chunk`` > 0 additionally scans over query blocks (flash-style 2-D
+    tiling): bounds the live (Sq_blk, kv_chunk) score tile — required at
+    32k-prefill scales where a full (Sq, kc) stripe per head is GBs.
+    ``kv_chunk >= Sk`` collapses the KV scan into a single unrolled block
+    (the decode path: scanning over a TP-sharded cache axis would force
+    an all-gather per iteration; one block lets GSPMD keep KV stripes
+    local and all-reduce the per-stripe partial softmax — the
+    flash-decoding split-KV combine, compiler-inserted).
+    """
+    B, Sq, H, D = q.shape
+    if q_chunk and Sq > q_chunk and Sq % q_chunk == 0:
+        nq = Sq // q_chunk
+        if q_positions.ndim == 1:
+            q_positions = jnp.broadcast_to(q_positions[None], (B, Sq))
+        qs = jnp.moveaxis(q.reshape(B, nq, q_chunk, H, D), 1, 0)
+        qp = jnp.moveaxis(q_positions.reshape(B, nq, q_chunk), 1, 0)
+
+        def qblock(_, inp):
+            qb, qpb = inp
+            out = attention_core(
+                qb, k, v, q_positions=qpb, kv_positions=kv_positions,
+                causal=causal, window=window, prefix_len=prefix_len,
+                kv_len=kv_len, kv_chunk=kv_chunk, scale=scale,
+                softcap=softcap, flash_vjp=flash_vjp)
+            return None, out
+
+        _, outs = jax.lax.scan(qblock, None, (qs, qp))
+        return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, v.shape[3])
+
+    if flash_vjp and not isinstance(kv_len, jnp.ndarray) \
+            and not isinstance(prefix_len, jnp.ndarray) \
+            and kv_positions is None:
+        from repro.models import flash_attn as FA
+        cfgt = (causal, window, prefix_len,
+                scale if scale is not None else q.shape[-1] ** -0.5,
+                softcap, kv_len)
+        return FA.flash_attention(q, k, v, q_positions, cfgt, kv_chunk)
+    Sk, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[3]                       # may differ from D (MLA)
+    G = H // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    kc = min(kv_chunk, Sk)
+    if Sk % kc:
+        pad = kc - Sk % kc
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_len = jnp.asarray(Sk if kv_len is None else kv_len)
+        Sk = Sk + pad
+    nk = Sk // kc
+    if kv_positions is None:
+        kv_positions = jnp.arange(Sk)
+
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D)
+    k_r = k.reshape(B, nk, kc, Hkv, D)
+    v_r = v.reshape(B, nk, kc, Hkv, Dv)
+    kp_r = kv_positions.reshape(nk, kc) if kv_positions.ndim == 1 else None
+    if kp_r is None:
+        raise ValueError("kv_positions must be 1-D absolute positions")
+
+    if q_positions.ndim == 1:
+        q_positions = jnp.broadcast_to(q_positions[None], (B, Sq))
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kb, vb, kp = inp                       # (B,kc,Hkv,D), ..., (kc,)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kb.astype(jnp.float32))
+        s = s * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = _block_mask(q_positions, kp, causal=causal, window=window,
+                           prefix_len=prefix_len, kv_len=kv_len)
+        # mask (B, Sq, kc) -> (B, 1, 1, Sq, kc)
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = p * (s > NEG_INF / 2)              # zero fully-masked entries
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, G, Sq, Dv), jnp.float32)
+    if nk == 1:   # single block: no scan (keeps sharded-KV decode local)
+        (m, l, acc), _ = step((m0, l0, acc0),
+                              (k_r[:, 0], v_r[:, 0], kp_r[0]))
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, acc0),
+            (jnp.moveaxis(k_r, 1, 0), jnp.moveaxis(v_r, 1, 0), kp_r))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]     # (B,Hkv,G,Sq,Dv)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+def attention_block(cfg, p, x, positions, *, causal=True, prefix_len=None,
+                    window=None) -> jnp.ndarray:
+    """Full attention sub-block for train/prefill (projections included)."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.attn_dims
+    q, k, v = qkv_project(cfg, p, x, positions)
+    w = cfg.sliding_window if window is None else window
+    out = attention_core(q, k, v, q_positions=positions, causal=causal,
+                         window=w, prefix_len=prefix_len,
+                         softcap=cfg.attn_logit_softcap,
+                         q_chunk=cfg.attn_q_chunk, flash_vjp=cfg.flash_vjp)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def decode_attention(cfg, p, x, cache_k, cache_v, pos, *,
+                     prefix_len=None, use_flash: bool = False):
+    """One-token decode: x (B,1,d), cache (B,S_buf,Hkv,hd), pos (B,) int32
+    absolute position. Returns (out (B,1,d), new_k, new_v).
+
+    Sliding-window archs keep a RING buffer of capacity window: the new
+    key (roped at its absolute position — RoPE is relative, so scores
+    stay correct) overwrites slot ``pos % window`` and attention simply
+    covers every valid slot. Full-attention archs use a linear buffer of
+    capacity seq_len.
+    """
+    del prefix_len  # decode tokens sit after any prefix => plain causal
+    B, _, d = x.shape
+    H, Hkv, hd = cfg.attn_dims
+    S_buf = cache_k.shape[1]
+    windowed = bool(cfg.sliding_window) and cfg.sliding_window <= S_buf
+    q, k_new, v_new = qkv_project(cfg, p, x, pos[:, None], rope=True)
+    slot = pos % S_buf if windowed else pos
+    cache_k = _insert_at(cache_k, k_new, slot)
+    cache_v = _insert_at(cache_v, v_new, slot)
+    kv_len = jnp.minimum(pos + 1, S_buf) if windowed else pos + 1
+    if use_flash:
+        from repro.kernels import ops as kops
+        out = kops.flash_decode(q[:, 0], cache_k, cache_v, kv_len,
+                                scale=hd ** -0.5)[:, None]
+    else:
+        # windowed ring: every written slot is in-range => no causal mask,
+        # only the validity mask. linear buffer: plain causal + validity.
+        # kv_chunk = full buffer: one unrolled block so the TP-sharded
+        # cache stays local (split-KV partial softmax + all-reduce).
+        out = attention_core(q, cache_k, cache_v,
+                             q_positions=pos[:, None], causal=not windowed,
+                             window=0, kv_len=kv_len,
+                             kv_chunk=cache_k.shape[1],
+                             softcap=cfg.attn_logit_softcap)
+    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    return out, cache_k, cache_v
+
+
+def _insert_at(cache, new, pos):
+    """cache (B,S,h,d), new (B,1,h,d), pos (B,) -> cache with row written.
+
+    vmapped dynamic_update_slice => a true scatter (O(1) rows touched),
+    not an O(S) one-hot rewrite — matters at 524288-entry caches.
+    """
+    def one(c, n, p):
+        return jax.lax.dynamic_update_slice_in_dim(c, n.astype(c.dtype),
+                                                   p, axis=0)
+    return jax.vmap(one)(cache, new.astype(cache.dtype), pos)

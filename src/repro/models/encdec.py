@@ -1,0 +1,283 @@
+"""Encoder-decoder transformer (Whisper-base backbone, arXiv:2212.04356).
+
+Per the assignment carve-out, the mel-spectrogram + conv frontend is a
+STUB: `input_specs()` supplies precomputed frame embeddings
+(B, encoder_seq, d_model). We implement the transformer: bidirectional
+encoder, causal decoder with cross-attention, LayerNorm + GELU.
+
+Deviation (DESIGN.md): Whisper's learned positional embeddings are
+replaced by computed sinusoidal embeddings on both sides — the assigned
+decode shapes (32k/524k) far exceed Whisper's 448-token table, and a
+524288 x d learned table would be pure padding. Sinusoidal keeps the
+backbone shape-faithful at any length.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models.mlp import init_mlp, mlp_block
+from repro.models.lm import _fit
+
+Pytree = Any
+
+
+def sinusoid(positions, d: int) -> jnp.ndarray:
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class EncDecModel:
+    def __init__(self, cfg):
+        assert cfg.family == "encdec"
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------------ init
+
+    def _init_enc_layer(self, key):
+        cfg, d, dt = self.cfg, self.cfg.d_model, self.dtype
+        k1, k2 = jax.random.split(key)
+        return {"ln1": L.init_norm(cfg, d),
+                "attn": A.init_attention(k1, cfg, d, dt),
+                "ln2": L.init_norm(cfg, d),
+                "mlp": init_mlp(k2, cfg, d, cfg.d_ff, dt)}
+
+    def _init_dec_layer(self, key):
+        cfg, d, dt = self.cfg, self.cfg.d_model, self.dtype
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"ln1": L.init_norm(cfg, d),
+                "self_attn": A.init_attention(k1, cfg, d, dt),
+                "ln_x": L.init_norm(cfg, d),
+                "cross_attn": A.init_attention(k2, cfg, d, dt),
+                "ln2": L.init_norm(cfg, d),
+                "mlp": init_mlp(k3, cfg, d, cfg.d_ff, dt)}
+
+    def init(self, key) -> Pytree:
+        cfg, d = self.cfg, self.cfg.d_model
+        ks = jax.random.split(key, 4)
+        enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+        dec_keys = jax.random.split(ks[1], cfg.num_layers)
+        params = {
+            "embed": L.embed_init(ks[2], cfg.vocab_size, d, self.dtype),
+            "enc_layers": jax.vmap(self._init_enc_layer)(enc_keys),
+            "enc_norm": L.init_norm(cfg, d),
+            "dec_layers": jax.vmap(self._init_dec_layer)(dec_keys),
+            "final_norm": L.init_norm(cfg, d),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = L.dense_init(ks[3], d, cfg.vocab_size,
+                                             self.dtype)
+        return params
+
+    def stacked_marker(self, params: Pytree) -> Pytree:
+        def mark(path, leaf):
+            return any(getattr(p, "key", None) in ("enc_layers", "dec_layers")
+                       for p in path)
+        return jax.tree_util.tree_map_with_path(mark, params)
+
+    # --------------------------------------------------------------- encoder
+
+    def encode(self, params, frames) -> jnp.ndarray:
+        """frames (B, S_enc, d): stub conv-frontend output embeddings."""
+        cfg = self.cfg
+        B, S, d = frames.shape
+        positions = jnp.arange(S)
+        x = frames.astype(self.dtype) + \
+            sinusoid(positions, d).astype(self.dtype)[None]
+
+        def body(x, params_l):
+            h = L.apply_norm(cfg, x, params_l["ln1"])
+            x = x + A.attention_block(cfg, params_l["attn"], h, positions,
+                                      causal=False)
+            h = L.apply_norm(cfg, x, params_l["ln2"])
+            x = x + mlp_block(cfg, params_l["mlp"], h)
+            return x, None
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        else:
+            for i in range(cfg.encoder_layers):
+                params_l = jax.tree_util.tree_map(lambda t: t[i],
+                                                  params["enc_layers"])
+                x, _ = body(x, params_l)
+        return L.apply_norm(cfg, x, params["enc_norm"])
+
+    # --------------------------------------------------------------- decoder
+
+    def _cross_attend(self, params_l, x, enc_out, positions):
+        cfg = self.cfg
+        B, S, d = x.shape
+        H, Hkv, hd = cfg.attn_dims
+        p = params_l["cross_attn"]
+        q = (x @ p["wq"]).reshape(B, S, H, hd)
+        k = (enc_out @ p["wk"]).reshape(B, -1, Hkv, hd)
+        v = (enc_out @ p["wv"]).reshape(B, -1, Hkv, hd)
+        out = A.attention_core(q, k, v, q_positions=positions,
+                               causal=False, q_chunk=cfg.attn_q_chunk,
+                               flash_vjp=cfg.flash_vjp)
+        return out.reshape(B, S, H * hd) @ p["wo"]
+
+    def _dec_layer(self, params_l, x, enc_out, positions):
+        cfg = self.cfg
+        h = L.apply_norm(cfg, x, params_l["ln1"])
+        x = x + A.attention_block(cfg, params_l["self_attn"], h, positions,
+                                  causal=True, window=cfg.sliding_window)
+        h = L.apply_norm(cfg, x, params_l["ln_x"])
+        x = x + self._cross_attend(params_l, h, enc_out, positions)
+        h = L.apply_norm(cfg, x, params_l["ln2"])
+        x = x + mlp_block(cfg, params_l["mlp"], h)
+        return x
+
+    def logits(self, params, x):
+        cfg = self.cfg
+        x = L.apply_norm(cfg, x, params["final_norm"])
+        w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        return (x @ w).astype(jnp.float32)
+
+    def forward(self, params, tokens, *, frames) -> tuple[jnp.ndarray, dict]:
+        """Teacher-forced training forward. tokens (B,S_dec);
+        frames (B,S_enc,d). Returns (logits, aux)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        B, S = tokens.shape
+        positions = jnp.arange(S)
+        x = params["embed"][tokens] + \
+            sinusoid(positions, cfg.d_model).astype(self.dtype)[None]
+
+        def body(x, params_l):
+            return self._dec_layer(params_l, x, enc_out, positions), None
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        else:
+            for i in range(cfg.num_layers):
+                params_l = jax.tree_util.tree_map(lambda t: t[i],
+                                                  params["dec_layers"])
+                x, _ = body(x, params_l)
+        return self.logits(params, x), {"aux_loss": jnp.zeros((), jnp.float32)}
+
+    # ----------------------------------------------------------------- serve
+
+    def init_cache(self, batch: int, seq_len: int,
+                   dtype: Optional[jnp.dtype] = None) -> Pytree:
+        cfg = self.cfg
+        dt = dtype or self.dtype
+        H, Hkv, hd = cfg.attn_dims
+        Lk = cfg.num_layers
+        win = cfg.sliding_window or seq_len
+        s_buf = min(seq_len, win)
+        return {
+            "pos": jnp.zeros((batch,), jnp.int32),
+            "k": jnp.zeros((Lk, batch, s_buf, Hkv, hd), dt),
+            "v": jnp.zeros((Lk, batch, s_buf, Hkv, hd), dt),
+            # cross-attention K/V precomputed once from the encoder
+            "xk": jnp.zeros((Lk, batch, cfg.encoder_seq, Hkv, hd), dt),
+            "xv": jnp.zeros((Lk, batch, cfg.encoder_seq, Hkv, hd), dt),
+        }
+
+    def prefill(self, params, tokens, *, frames, cache_len=None):
+        """Encode + teacher-forced decoder pass building both caches."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        B, S = tokens.shape
+        positions = jnp.arange(S)
+        cap = cache_len or S
+        cache = self.init_cache(B, cap)
+        s_buf = cache["k"].shape[2]
+        H, Hkv, hd = cfg.attn_dims
+        x = params["embed"][tokens] + \
+            sinusoid(positions, cfg.d_model).astype(self.dtype)[None]
+
+        def body(x, params_l):
+            h = L.apply_norm(cfg, x, params_l["ln1"])
+            q, k, v = A.qkv_project(cfg, params_l["self_attn"], h, positions)
+            out = A.attention_core(q, k, v, q_positions=positions,
+                                   causal=True, window=cfg.sliding_window,
+                                   q_chunk=cfg.attn_q_chunk,
+                                   flash_vjp=cfg.flash_vjp)
+            x = x + out.reshape(B, S, H * hd) @ params_l["self_attn"]["wo"]
+            h = L.apply_norm(cfg, x, params_l["ln_x"])
+            x = x + self._cross_attend(params_l, h, enc_out, positions)
+            h = L.apply_norm(cfg, x, params_l["ln2"])
+            x = x + mlp_block(cfg, params_l["mlp"], h)
+            p = params_l["cross_attn"]
+            xk = (enc_out @ p["wk"]).reshape(B, -1, Hkv, hd)
+            xv = (enc_out @ p["wv"]).reshape(B, -1, Hkv, hd)
+            return x, {"k": _fit(k, s_buf, axis=1), "v": _fit(v, s_buf, axis=1),
+                       "xk": xk, "xv": xv}
+
+        if cfg.scan_layers:
+            x, ys = jax.lax.scan(body, x, params["dec_layers"])
+        else:
+            outs = []
+            for i in range(cfg.num_layers):
+                params_l = jax.tree_util.tree_map(lambda t: t[i],
+                                                  params["dec_layers"])
+                x, kv_out = body(x, params_l)
+                outs.append(kv_out)
+            ys = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+        k_fit, v_fit = ys["k"], ys["v"]
+        if cfg.sliding_window and S > s_buf:
+            k_fit = jnp.roll(k_fit, S % s_buf, axis=2)
+            v_fit = jnp.roll(v_fit, S % s_buf, axis=2)
+        cache["k"] = k_fit.astype(cache["k"].dtype)
+        cache["v"] = v_fit.astype(cache["v"].dtype)
+        cache["xk"] = ys["xk"].astype(cache["xk"].dtype)
+        cache["xv"] = ys["xv"].astype(cache["xv"].dtype)
+        cache["pos"] = jnp.full((B,), S, jnp.int32)
+        return self.logits(params, x[:, -1:])[:, 0], cache
+
+    def decode_step(self, params, cache, tokens, **_):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        pos = cache["pos"]
+        H, Hkv, hd = cfg.attn_dims
+        x = params["embed"][tokens] + jax.vmap(
+            lambda p: sinusoid(p[None], cfg.d_model))(pos).astype(self.dtype)
+
+        def body(carry, inp):
+            x, = carry
+            params_l, cache_l = inp
+            h = L.apply_norm(cfg, x, params_l["ln1"])
+            out, k, v = A.decode_attention(cfg, params_l["self_attn"], h,
+                                           cache_l["k"], cache_l["v"], pos)
+            x = x + out
+            h = L.apply_norm(cfg, x, params_l["ln_x"])
+            p = params_l["cross_attn"]
+            q = (h @ p["wq"]).reshape(B, 1, H, hd)
+            out = A.attention_core(q, cache_l["xk"], cache_l["xv"],
+                                   q_positions=pos[:, None], causal=False)
+            x = x + out.reshape(B, 1, H * hd) @ p["wo"]
+            h = L.apply_norm(cfg, x, params_l["ln2"])
+            x = x + mlp_block(cfg, params_l["mlp"], h)
+            return (x,), {"k": k, "v": v}
+
+        layer_cache = {k: cache[k] for k in ("k", "v", "xk", "xv")}
+        if cfg.scan_layers:
+            (x,), new_kv = jax.lax.scan(
+                body, (x,), (params["dec_layers"], layer_cache))
+        else:
+            carry, outs = (x,), []
+            for i in range(cfg.num_layers):
+                sl = jax.tree_util.tree_map(
+                    lambda t: t[i], (params["dec_layers"], layer_cache))
+                carry, kv = body(carry, sl)
+                outs.append(kv)
+            (x,) = carry
+            new_kv = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+        new_cache = dict(cache, k=new_kv["k"], v=new_kv["v"], pos=pos + 1)
+        return self.logits(params, x), new_cache

@@ -1,0 +1,188 @@
+"""Memory-lean attention with a custom VJP (FlashAttention-2 backward,
+expressed in jnp for GSPMD).
+
+The stock `attention_core` under `jax.grad` lets JAX save the per-chunk
+probability tensors and online-softmax carries for the backward pass —
+O(Sq * Sk) residual bytes per layer, the dominant peak-memory term of the
+train/prefill dry-runs. This version saves only (q, k, v, out, m, l)
+— O(Sq * D) — and RECOMPUTES each (Sq, kc) score tile inside the
+backward scan, exactly like the fused-SRAM flash backward; XLA tiles it
+onto the MXU per chunk.
+
+Semantics match `attention_core` (same mask model: causal / window /
+prefix-LM / kv_len validity, softcap, GQA, Dv != D) and are asserted
+against it in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def _mask(qp, kp, cfgt):
+    causal, window, prefix_len, _, _, kv_len = cfgt
+    qp = qp[..., :, None]
+    kp_b = kp[None, :]
+    if causal:
+        ok = kp_b <= qp
+        if prefix_len is not None:
+            ok = ok | ((qp < prefix_len) & (kp_b < prefix_len))
+    else:
+        ok = jnp.ones(jnp.broadcast_shapes(qp.shape, kp_b.shape), bool)
+    if window:
+        ok = ok & (kp_b > qp - window)
+    if kv_len is not None:
+        ok = ok & (kp_b < kv_len)
+    return ok
+
+
+def _scores(qf, kb, qpos, kp, cfgt):
+    """(B,Hkv,G,Sq,kc) masked scaled scores (f32) + raw tanh arg if capped.
+
+    Inputs stay in model dtype; f32 comes from the einsum ACCUMULATOR
+    (preferred_element_type) — materializing an f32 copy of q makes XLA
+    hoist the convert into the custom-VJP's saved residual, storing q in
+    f32 for all L layers (§Perf qwen2 iteration 3)."""
+    causal, window, prefix_len, scale, softcap, kv_len = cfgt
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kb,
+                   preferred_element_type=jnp.float32) * scale
+    cap_t = None
+    if softcap:
+        cap_t = jnp.tanh(s / softcap)
+        s = softcap * cap_t
+    m = _mask(qpos, kp, cfgt)
+    s = jnp.where(m[:, None, None, :, :], s, NEG_INF)
+    return s, cap_t
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def flash_attention(q, k, v, q_positions, cfgt, kv_chunk):
+    out, _, _ = _flash_fwd_impl(q, k, v, q_positions, cfgt, kv_chunk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, q_positions, cfgt, kv_chunk):
+    B, Sq, H, D = q.shape
+    Sk, Hkv, Dv = k.shape[1], k.shape[2], v.shape[3]
+    G = H // Hkv
+    kc = min(kv_chunk, Sk)
+    pad = (-Sk) % kc
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nk = (Sk + pad) // kc
+    kp_all = jnp.arange(Sk + pad)   # padded tail masked by kv_len/causal
+    if pad and cfgt[5] is None:
+        cfgt = cfgt[:5] + (Sk,)
+    qf = q.reshape(B, Sq, Hkv, G, D)        # model dtype; f32 via einsum acc
+    if q_positions.ndim == 1:
+        q_positions = jnp.broadcast_to(q_positions[None], (B, Sq))
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kb, vb, kp = inp
+        s, _ = _scores(qf, kb, q_positions, kp, cfgt)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None]) * (s > NEG_INF / 2)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vb,
+                        preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc * alpha[..., None] + pv), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, G, Sq, Dv), jnp.float32)
+    k_r = jnp.moveaxis(k.reshape(B, nk, kc, Hkv, D), 1, 0)
+    v_r = jnp.moveaxis(v.reshape(B, nk, kc, Hkv, Dv), 1, 0)
+    kp_r = kp_all.reshape(nk, kc)
+    if nk == 1:
+        (m, l, acc), _ = step((m0, l0, acc0), (k_r[0], v_r[0], kp_r[0]))
+    else:
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, acc0),
+                                      (k_r, v_r, kp_r))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, Dv).astype(q.dtype)
+    return out, m, l
+
+
+def _flash_fwd(q, k, v, q_positions, cfgt, kv_chunk):
+    out, m, l = _flash_fwd_impl(q, k, v, q_positions, cfgt, kv_chunk)
+    return out, (q, k, v, q_positions, out, m, l)
+
+
+def _flash_bwd(cfgt, kv_chunk, res, do):
+    causal, window, prefix_len, scale, softcap, kv_len = cfgt
+    q, k, v, q_positions, out, m, l = res
+    B, Sq, H, D = q.shape
+    Sk, Hkv, Dv = k.shape[1], k.shape[2], v.shape[3]
+    G = H // Hkv
+    kc = min(kv_chunk, Sk)
+    pad = (-Sk) % kc
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if cfgt[5] is None:
+            cfgt = cfgt[:5] + (Sk,)
+    nk = (Sk + pad) // kc
+    qf = q.reshape(B, Sq, Hkv, G, D)        # model dtype (see _scores)
+    if q_positions.ndim == 1:
+        q_positions = jnp.broadcast_to(q_positions[None], (B, Sq))
+    dof = do.reshape(B, Sq, Hkv, G, Dv)
+    dof = jnp.moveaxis(dof, 1, 3)                       # (B,Hkv,G,Sq,Dv)
+    outf = out.reshape(B, Sq, Hkv, G, Dv)
+    outf = jnp.moveaxis(outf, 1, 3)
+    delta = jnp.einsum("bhgqd,bhgqd->bhgq", dof, outf,
+                       preferred_element_type=jnp.float32)
+    l_safe = jnp.maximum(l, 1e-30)
+
+    k_r = jnp.moveaxis(k.reshape(B, nk, kc, Hkv, D), 1, 0)
+    v_r = jnp.moveaxis(v.reshape(B, nk, kc, Hkv, Dv), 1, 0)
+    kp_r = jnp.arange(Sk + pad).reshape(nk, kc)
+
+    def step(dq_acc, inp):
+        kb, vb, kp = inp
+        s, cap_t = _scores(qf, kb, q_positions, kp, cfgt)
+        p = jnp.exp(s - m[..., None]) * (s > NEG_INF / 2) / l_safe[..., None]
+        dp = jnp.einsum("bhgqd,bkhd->bhgqk", dof, vb,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None])                # d wrt capped s
+        if softcap:
+            ds = ds * (1.0 - jnp.square(cap_t))         # through tanh
+        dv_c = jnp.einsum("bhgqk,bhgqd->bkhd", p, dof,
+                          preferred_element_type=jnp.float32)
+        dk_c = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qf,
+                          preferred_element_type=jnp.float32) * scale
+        dq_acc = dq_acc + jnp.einsum(
+            "bhgqk,bkhd->bqhgd", ds, kb,
+            preferred_element_type=jnp.float32) * scale
+        return dq_acc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+    if nk == 1:
+        dq, (dk_c, dv_c) = step(dq0, (k_r[0], v_r[0], kp_r[0]))
+        dk, dv = dk_c[:, None], dv_c[:, None]
+        dk = dk.reshape(B, Sk + pad, Hkv, D)
+        dv = dv.reshape(B, Sk + pad, Hkv, Dv)
+    else:
+        dq, (dk_s, dv_s) = jax.lax.scan(jax.checkpoint(step), dq0,
+                                        (k_r, v_r, kp_r))
+        dk = jnp.moveaxis(dk_s, 0, 1).reshape(B, Sk + pad, Hkv, D)
+        dv = jnp.moveaxis(dv_s, 0, 1).reshape(B, Sk + pad, Hkv, Dv)
+    if pad:
+        dk, dv = dk[:, :Sk], dv[:, :Sk]
+    dq = dq.reshape(B, Sq, H, D).astype(q.dtype)
+    import numpy as np
+    dpos = np.zeros(q_positions.shape, jax.dtypes.float0) \
+        if jnp.issubdtype(q_positions.dtype, jnp.integer) \
+        else jnp.zeros_like(q_positions)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype), dpos
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

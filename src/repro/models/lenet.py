@@ -1,0 +1,80 @@
+"""The paper's CNN (§3.1, Fig. 1): LeNet-style —
+conv 6@5x5 (zero pad) -> maxpool 2x2 -> conv 16@5x5 (zero pad) ->
+maxpool 2x2 -> FC 120 -> FC 84 -> FC 10, ReLU everywhere, softmax head.
+
+This is the exact model the paper trains on MNIST under SystemML; the
+SGD-vs-LARS batch-size sweep (benchmarks/paper_sweep.py) uses it.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def conv2d(x, w, b, *, padding="SAME"):
+    """x (B,H,W,C), w (kh,kw,Cin,Cout)."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def maxpool2x2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1), padding="VALID")
+
+
+class LeNet:
+    def __init__(self, cfg=None, *, image_size: int = 28, channels: int = 1,
+                 num_classes: int = 10):
+        self.cfg = cfg
+        self.image_size = image_size
+        self.channels = channels
+        self.num_classes = num_classes
+        # after two 2x2 pools on a 'SAME'-padded input
+        side = image_size // 4
+        self.flat_dim = side * side * 16
+
+    def init(self, key) -> Pytree:
+        ks = jax.random.split(key, 5)
+
+        def he(k, shape, fan_in):
+            return jax.random.normal(k, shape, jnp.float32) * \
+                (2.0 / fan_in) ** 0.5
+
+        return {
+            "conv1": {"w": he(ks[0], (5, 5, self.channels, 6),
+                              25 * self.channels),
+                      "b": jnp.zeros((6,), jnp.float32)},
+            "conv2": {"w": he(ks[1], (5, 5, 6, 16), 25 * 6),
+                      "b": jnp.zeros((16,), jnp.float32)},
+            "fc1": {"w": he(ks[2], (self.flat_dim, 120), self.flat_dim),
+                    "b": jnp.zeros((120,), jnp.float32)},
+            "fc2": {"w": he(ks[3], (120, 84), 120),
+                    "b": jnp.zeros((84,), jnp.float32)},
+            "fc3": {"w": he(ks[4], (84, self.num_classes), 84),
+                    "b": jnp.zeros((self.num_classes,), jnp.float32)},
+        }
+
+    def stacked_marker(self, params: Pytree) -> Pytree:
+        return jax.tree_util.tree_map(lambda _: False, params)
+
+    def forward(self, params, images) -> tuple[jnp.ndarray, dict]:
+        """images (B, H, W, C) -> (logits (B, 10), aux)."""
+        x = jax.nn.relu(conv2d(images, params["conv1"]["w"],
+                               params["conv1"]["b"]))
+        x = maxpool2x2(x)
+        x = jax.nn.relu(conv2d(x, params["conv2"]["w"],
+                               params["conv2"]["b"]))
+        x = maxpool2x2(x)
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+        logits = x @ params["fc3"]["w"] + params["fc3"]["b"]
+        return logits, {"aux_loss": jnp.zeros((), jnp.float32)}

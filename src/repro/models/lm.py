@@ -1,0 +1,543 @@
+"""Generic decoder-only language model covering the dense / MoE / SSM /
+hybrid / VLM families, assembled from the shared blocks.
+
+Key structural decisions:
+  * per-layer params are STACKED on a leading (L, ...) axis and the layer
+    loop is a `lax.scan` — keeps HLO size O(1) in depth (mandatory for
+    compiling 60-81-layer configs 80 times in the dry-run) and is what the
+    LARS `stacked` marker machinery exists for;
+  * remat (`jax.checkpoint`) wraps the scan body, policy `nothing_saveable`
+    by default — residual-stream inputs are the only per-layer live values;
+  * hybrid (zamba2): every `attn_every`-th scan step additionally applies a
+    SHARED full attention+MLP block (same weights each application, its own
+    KV cache per application) via `lax.cond` — the Zamba2 pattern;
+  * VLM (paligemma): the text transformer consumes stub image patch
+    embeddings as a bidirectional prefix (prefix-LM mask).
+
+API: init / forward (train) / prefill / decode_step / init_cache /
+stacked_marker.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import mla as MLA
+from repro.models import ssm as SSM
+from repro.models.mlp import init_mlp, mlp_block
+from repro.models.moe import init_moe, moe_block
+from repro.distributed.constrain import shard_batch
+
+Pytree = Any
+
+
+class LanguageModel:
+    def __init__(self, cfg):
+        assert cfg.family in ("dense", "moe", "ssm", "hybrid", "vlm"), cfg.family
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------------ init
+
+    def _init_layer(self, key) -> dict:
+        cfg, d, dt = self.cfg, self.cfg.d_model, self.dtype
+        ks = jax.random.split(key, 4)
+        if cfg.family == "ssm":
+            return {"ln1": L.init_norm(cfg, d),
+                    "ssm": SSM.init_mamba1(ks[0], cfg, dt)}
+        if cfg.family == "hybrid":
+            return {"ln1": L.init_norm(cfg, d),
+                    "ssm": SSM.init_mamba2(ks[0], cfg, dt)}
+        p = {"ln1": L.init_norm(cfg, d), "ln2": L.init_norm(cfg, d)}
+        if cfg.use_mla:
+            p["attn"] = MLA.init_mla(ks[0], cfg, d, dt)
+        else:
+            p["attn"] = A.init_attention(ks[0], cfg, d, dt)
+        if cfg.family == "moe":
+            p["moe"] = init_moe(ks[1], cfg, d, dt)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg, d, cfg.d_ff, dt)
+        return p
+
+    def init(self, key) -> Pytree:
+        cfg, d, dt = self.cfg, self.cfg.d_model, self.dtype
+        k_emb, k_layers, k_shared, k_out = jax.random.split(key, 4)
+        layer_keys = jax.random.split(k_layers, cfg.num_layers)
+        params = {
+            "embed": L.embed_init(k_emb, cfg.vocab_size, d, dt),
+            "layers": jax.vmap(self._init_layer)(layer_keys),
+            "final_norm": L.init_norm(cfg, d),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = L.dense_init(k_out, d, cfg.vocab_size, dt)
+        if cfg.family == "hybrid":
+            params["shared"] = {
+                "ln1": L.init_norm(cfg, d),
+                "attn": A.init_attention(k_shared, cfg, d, dt),
+                "ln2": L.init_norm(cfg, d),
+                "mlp": init_mlp(jax.random.fold_in(k_shared, 1), cfg, d,
+                                cfg.d_ff, dt),
+            }
+        return params
+
+    def stacked_marker(self, params: Pytree) -> Pytree:
+        """Bool pytree: True for (L, ...)-stacked leaves (under 'layers')."""
+        def mark(path, leaf):
+            return any(getattr(p, "key", None) == "layers" for p in path)
+        return jax.tree_util.tree_map_with_path(mark, params)
+
+    # ------------------------------------------------------------- embedding
+
+    def embed_tokens(self, params, tokens):
+        # pin the gather output to batch-sharded / d-replicated — the
+        # vocab-parallel table would otherwise leave it ambiguous
+        return shard_batch(params["embed"][tokens])
+
+    def logits(self, params, x):
+        cfg = self.cfg
+        x = L.apply_norm(cfg, x, params["final_norm"])
+        w = (params["embed"].T if cfg.tie_embeddings
+             else params["unembed"])
+        return shard_batch((x @ w).astype(jnp.float32), last="model")
+
+    # ----------------------------------------------------------------- train
+
+    def _layer_train(self, params_l, x, positions, prefix_len, layer_idx,
+                     shared):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.family in ("ssm", "hybrid"):
+            h = L.apply_norm(cfg, x, params_l["ln1"])
+            fwd = (SSM.mamba1_forward if cfg.family == "ssm"
+                   else SSM.mamba2_forward)
+            y, _ = fwd(cfg, params_l["ssm"], h)
+            x = x + y
+            if cfg.family == "hybrid" and cfg.attn_every:
+                def with_attn(x):
+                    h = L.apply_norm(cfg, x, shared["ln1"])
+                    x = x + A.attention_block(cfg, shared["attn"], h,
+                                              positions)
+                    h = L.apply_norm(cfg, x, shared["ln2"])
+                    return x + mlp_block(cfg, shared["mlp"], h)
+                x = jax.lax.cond(layer_idx % cfg.attn_every == 0,
+                                 with_attn, lambda x: x, x)
+            return x, aux
+
+        h = L.apply_norm(cfg, x, params_l["ln1"])
+        if cfg.use_mla:
+            attn_out = MLA.mla_block(cfg, params_l["attn"], h, positions)
+        else:
+            attn_out = A.attention_block(cfg, params_l["attn"], h, positions,
+                                         prefix_len=prefix_len)
+        x = x + attn_out
+        h = L.apply_norm(cfg, x, params_l["ln2"])
+        if cfg.family == "moe":
+            y, moe_aux = moe_block(cfg, params_l["moe"], h)
+            aux = aux + moe_aux["aux_loss"]
+            x = x + y
+        else:
+            x = x + mlp_block(cfg, params_l["mlp"], h)
+        return x, aux
+
+    def forward(self, params, tokens, *, image_embeddings=None,
+                return_hidden: bool = False) -> tuple[jnp.ndarray, dict]:
+        """Train/eval forward. tokens (B, S_text).
+
+        VLM: image_embeddings (B, n_img, d) stub prepended as bidirectional
+        prefix; logits returned for the FULL sequence (loss masks prefix).
+        Returns (logits (B, S, V) f32, aux dict) — or the final-norm
+        hidden states (B, S, d) when ``return_hidden`` (the chunked-loss
+        path computes the vocab matmul itself).
+        """
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        prefix_len = None
+        if cfg.family == "vlm":
+            assert image_embeddings is not None, "vlm needs image stub"
+            x = jnp.concatenate(
+                [image_embeddings.astype(x.dtype), x], axis=1)
+            prefix_len = image_embeddings.shape[1]
+        B, S, d = x.shape
+        positions = jnp.arange(S)
+        shared = params.get("shared")
+
+        def body(carry, inp):
+            x, aux = carry
+            # barrier: stops XLA hoisting the layer's first bf16->f32
+            # convert (rmsnorm) into the scan's saved-carry stack, which
+            # would store all L carries in f32 — 2x peak memory
+            # (observed: 172 GB/device on qwen2-72b; §Perf iteration 2)
+            x = jax.lax.optimization_barrier(x)
+            params_l, idx = inp
+            x, aux_l = self._layer_train(params_l, x, positions, prefix_len,
+                                         idx, shared)
+            return (shard_batch(x), aux + aux_l), None
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        carry = (x, jnp.zeros((), jnp.float32))
+        blk = cfg.remat_block
+        if cfg.scan_layers and cfg.remat and blk \
+                and cfg.num_layers % blk == 0:
+            # sqrt-remat: outer scan over L/b checkpointed blocks, inner
+            # scan over b layers. Saved residual-stream carries drop from
+            # L slices to L/b (+ b transiently inside one block's
+            # backward) — the flat-scan carry stack (f32+bf16 copies)
+            # dominates peak train memory at depth 60-81 (§Perf).
+            nb = cfg.num_layers // blk
+            params_b = jax.tree_util.tree_map(
+                lambda t: t.reshape((nb, blk) + t.shape[1:]),
+                params["layers"])
+            idx_b = jnp.arange(cfg.num_layers).reshape(nb, blk)
+
+            def outer(c, inp):
+                pb, ib = inp
+                c, _ = jax.lax.scan(body, c, (pb, ib))
+                return c, None
+
+            outer = jax.checkpoint(
+                outer, policy=jax.checkpoint_policies.nothing_saveable)
+            carry, _ = jax.lax.scan(outer, carry, (params_b, idx_b))
+        elif cfg.scan_layers:
+            carry, _ = jax.lax.scan(
+                body, carry, (params["layers"], jnp.arange(cfg.num_layers)))
+        else:   # unrolled: exact per-layer cost accounting (dry-run probes)
+            for i in range(cfg.num_layers):
+                params_l = jax.tree_util.tree_map(lambda t: t[i],
+                                                  params["layers"])
+                carry, _ = body(carry, (params_l, jnp.asarray(i)))
+        x, aux = carry
+        if return_hidden:
+            return L.apply_norm(cfg, x, params["final_norm"]), \
+                {"aux_loss": aux}
+        return self.logits(params, x), {"aux_loss": aux}
+
+    def unembed_matrix(self, params):
+        return (params["embed"].T if self.cfg.tie_embeddings
+                else params["unembed"])
+
+    # ----------------------------------------------------------------- cache
+
+    def init_cache(self, batch: int, seq_len: int,
+                   dtype: Optional[jnp.dtype] = None) -> Pytree:
+        cfg = self.cfg
+        dt = dtype or self.dtype
+        Lk = cfg.num_layers
+        H, Hkv, hd = cfg.attn_dims
+        cache: dict[str, Any] = {
+            "pos": jnp.zeros((batch,), jnp.int32)}
+        if cfg.family == "ssm":
+            din = cfg.ssm_d_inner
+            cache["conv"] = jnp.zeros((Lk, batch, cfg.ssm_conv - 1, din), dt)
+            cache["h"] = jnp.zeros((Lk, batch, din, cfg.ssm_state),
+                                   jnp.float32)
+        elif cfg.family == "hybrid":
+            din = cfg.ssm_d_inner
+            dxbc = din + 2 * cfg.ssm_groups * cfg.ssm_state
+            heads = din // cfg.ssm_head_dim
+            cache["conv"] = jnp.zeros((Lk, batch, cfg.ssm_conv - 1, dxbc), dt)
+            cache["h"] = jnp.zeros(
+                (Lk, batch, heads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32)
+            n_attn = (Lk + cfg.attn_every - 1) // cfg.attn_every
+            win = cfg.sliding_window or seq_len
+            s_attn = min(seq_len, win)
+            cache["attn_k"] = jnp.zeros((n_attn, batch, s_attn, Hkv, hd), dt)
+            cache["attn_v"] = jnp.zeros((n_attn, batch, s_attn, Hkv, hd), dt)
+        elif cfg.use_mla:
+            cache["ckv"] = jnp.zeros((Lk, batch, seq_len, cfg.kv_lora_rank),
+                                     dt)
+            cache["krope"] = jnp.zeros((Lk, batch, seq_len, cfg.qk_rope_dim),
+                                       dt)
+        else:
+            win = cfg.sliding_window or seq_len
+            s_kv = min(seq_len, win) if cfg.sliding_window else seq_len
+            cache["k"] = jnp.zeros((Lk, batch, s_kv, Hkv, hd), dt)
+            cache["v"] = jnp.zeros((Lk, batch, s_kv, Hkv, hd), dt)
+        return cache
+
+    # ---------------------------------------------------------------- decode
+
+    def _layer_decode(self, params_l, x, cache_l, pos, prefix_len, layer_idx,
+                      shared, shared_cache):
+        """One layer, one token. cache_l: this layer's cache slices.
+        Returns (x, new_cache_l, new_shared_cache)."""
+        cfg = self.cfg
+        if cfg.family in ("ssm", "hybrid"):
+            h = L.apply_norm(cfg, x, params_l["ln1"])
+            fwd = (SSM.mamba1_forward if cfg.family == "ssm"
+                   else SSM.mamba2_forward)
+            y, new_state = fwd(cfg, params_l["ssm"], h,
+                               state={"conv": cache_l["conv"],
+                                      "h": cache_l["h"]})
+            x = x + y
+            new_cache_l = dict(cache_l, conv=new_state["conv"],
+                               h=new_state["h"])
+            if cfg.family == "hybrid" and cfg.attn_every:
+                k_all, v_all = shared_cache
+                a_idx = layer_idx // cfg.attn_every
+
+                def with_attn(args):
+                    x, k_all, v_all = args
+                    k_l = jax.lax.dynamic_index_in_dim(k_all, a_idx, 0,
+                                                       keepdims=False)
+                    v_l = jax.lax.dynamic_index_in_dim(v_all, a_idx, 0,
+                                                       keepdims=False)
+                    h = L.apply_norm(cfg, x, shared["ln1"])
+                    out, k_l, v_l = A.decode_attention(
+                        cfg, shared["attn"], h, k_l, v_l, pos)
+                    x = x + out
+                    h = L.apply_norm(cfg, x, shared["ln2"])
+                    x = x + mlp_block(cfg, shared["mlp"], h)
+                    k_all = jax.lax.dynamic_update_index_in_dim(
+                        k_all, k_l, a_idx, 0)
+                    v_all = jax.lax.dynamic_update_index_in_dim(
+                        v_all, v_l, a_idx, 0)
+                    return x, k_all, v_all
+
+                x, k_all, v_all = jax.lax.cond(
+                    layer_idx % cfg.attn_every == 0, with_attn,
+                    lambda a: a, (x, k_all, v_all))
+                shared_cache = (k_all, v_all)
+            return x, new_cache_l, shared_cache
+
+        h = L.apply_norm(cfg, x, params_l["ln1"])
+        if cfg.use_mla:
+            out, ckv, krope = MLA.mla_decode(cfg, params_l["attn"], h,
+                                             cache_l["ckv"], cache_l["krope"],
+                                             pos)
+            new_cache_l = dict(cache_l, ckv=ckv, krope=krope)
+        else:
+            out, k, v = A.decode_attention(cfg, params_l["attn"], h,
+                                           cache_l["k"], cache_l["v"], pos,
+                                           prefix_len=prefix_len)
+            new_cache_l = dict(cache_l, k=k, v=v)
+        x = x + out
+        h = L.apply_norm(cfg, x, params_l["ln2"])
+        if cfg.family == "moe":
+            y, _ = moe_block(cfg, params_l["moe"], h)
+            x = x + y
+        else:
+            x = x + mlp_block(cfg, params_l["mlp"], h)
+        return x, new_cache_l, shared_cache
+
+    def decode_step(self, params, cache, tokens, *, prefix_len=None
+                    ) -> tuple[jnp.ndarray, Pytree]:
+        """tokens (B, 1) -> (logits (B, 1, V), updated cache)."""
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        pos = cache["pos"]
+        shared = params.get("shared")
+        shared_cache = ((cache["attn_k"], cache["attn_v"])
+                        if cfg.family == "hybrid" else None)
+        layer_cache = {k: v for k, v in cache.items()
+                       if k not in ("pos", "attn_k", "attn_v")}
+
+        def body(carry, inp):
+            x, shared_cache = carry
+            params_l, cache_l, idx = inp
+            x, new_cache_l, shared_cache = self._layer_decode(
+                params_l, x, cache_l, pos, prefix_len, idx, shared,
+                shared_cache)
+            return (x, shared_cache), new_cache_l
+
+        if cfg.scan_layers:
+            (x, shared_cache), new_layer_cache = jax.lax.scan(
+                body, (x, shared_cache),
+                (params["layers"], layer_cache, jnp.arange(cfg.num_layers)))
+        else:
+            carry, outs = (x, shared_cache), []
+            for i in range(cfg.num_layers):
+                sl = jax.tree_util.tree_map(lambda t: t[i],
+                                            (params["layers"], layer_cache))
+                carry, new_cache_l = body(carry, (*sl, jnp.asarray(i)))
+                outs.append(new_cache_l)
+            x, shared_cache = carry
+            new_layer_cache = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *outs)
+
+        new_cache = dict(new_layer_cache)
+        new_cache["pos"] = pos + 1
+        if cfg.family == "hybrid":
+            new_cache["attn_k"], new_cache["attn_v"] = shared_cache
+        return self.logits(params, x), new_cache
+
+    # --------------------------------------------------------------- prefill
+
+    def prefill(self, params, tokens, *, image_embeddings=None,
+                cache_len: Optional[int] = None
+                ) -> tuple[jnp.ndarray, Pytree]:
+        """Run the full prompt, building a decode cache.
+
+        Implemented as forward + per-layer KV collection for attention
+        archs, and a state-carrying pass for SSM/hybrid. Returns
+        (last-token logits (B, V), cache ready for decode_step).
+        """
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        prefix_len = None
+        if cfg.family == "vlm":
+            x = jnp.concatenate([image_embeddings.astype(x.dtype), x], axis=1)
+            prefix_len = image_embeddings.shape[1]
+        B, S, d = x.shape
+        positions = jnp.arange(S)
+        cap = cache_len or S
+        cache = self.init_cache(B, cap)
+        shared = params.get("shared")
+
+        if cfg.family in ("ssm", "hybrid"):
+            return self._prefill_recurrent(params, x, positions, cache)
+
+        def body(carry, inp):
+            x, = carry
+            params_l, idx = inp
+            h = L.apply_norm(cfg, x, params_l["ln1"])
+            if cfg.use_mla:
+                ckv, krope = MLA._latents(cfg, params_l["attn"], h, positions)
+                out = MLA.mla_block(cfg, params_l["attn"], h, positions)
+                kv_out = {"ckv": ckv, "krope": krope[:, :, 0, :]}
+            else:
+                q, k, v = A.qkv_project(cfg, params_l["attn"], h, positions)
+                out = A.attention_core(
+                    q, k, v, q_positions=positions, causal=True,
+                    window=cfg.sliding_window, prefix_len=prefix_len,
+                    softcap=cfg.attn_logit_softcap,
+                    q_chunk=cfg.attn_q_chunk, flash_vjp=cfg.flash_vjp)
+                H, Hkv, hd = cfg.attn_dims
+                out = out.reshape(B, S, H * hd) @ params_l["attn"]["wo"]
+                kv_out = {"k": k, "v": v}
+            x = x + out
+            h = L.apply_norm(cfg, x, params_l["ln2"])
+            if cfg.family == "moe":
+                y, _ = moe_block(cfg, params_l["moe"], h)
+                x = x + y
+            else:
+                x = x + mlp_block(cfg, params_l["mlp"], h)
+            return (x,), kv_out
+
+        if cfg.scan_layers:
+            (x,), kvs = jax.lax.scan(body, (x,),
+                                     (params["layers"],
+                                      jnp.arange(cfg.num_layers)))
+        else:
+            carry, outs = (x,), []
+            for i in range(cfg.num_layers):
+                params_l = jax.tree_util.tree_map(lambda t: t[i],
+                                                  params["layers"])
+                carry, kv_out = body(carry, (params_l, jnp.asarray(i)))
+                outs.append(kv_out)
+            (x,) = carry
+            kvs = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+
+        logits = self.logits(params, x[:, -1:])[:, 0]
+        if cfg.use_mla:
+            cache["ckv"] = _fit(kvs["ckv"].astype(cache["ckv"].dtype),
+                                cache["ckv"].shape[2], axis=2)
+            cache["krope"] = _fit(kvs["krope"].astype(cache["krope"].dtype),
+                                  cache["krope"].shape[2], axis=2)
+        else:
+            s_buf = cache["k"].shape[2]
+            k_fit = _fit(kvs["k"].astype(cache["k"].dtype), s_buf, axis=2)
+            v_fit = _fit(kvs["v"].astype(cache["v"].dtype), s_buf, axis=2)
+            if cfg.sliding_window and S > s_buf:
+                # ring-align: absolute position p must sit at slot p % s_buf
+                k_fit = jnp.roll(k_fit, S % s_buf, axis=2)
+                v_fit = jnp.roll(v_fit, S % s_buf, axis=2)
+            cache["k"], cache["v"] = k_fit, v_fit
+        cache["pos"] = jnp.full((B,), S, jnp.int32)
+        return logits, cache
+
+    def _prefill_recurrent(self, params, x, positions, cache):
+        """SSM/hybrid prefill: full-sequence pass per layer, carrying the
+        recurrent state; hybrid shared-attention KV is collected for the
+        last `window` positions of each application."""
+        cfg = self.cfg
+        B, S, d = x.shape
+        shared = params.get("shared")
+        hybrid = cfg.family == "hybrid"
+        fwd = SSM.mamba1_forward if cfg.family == "ssm" else SSM.mamba2_forward
+        zero_state = {"conv": jnp.zeros_like(cache["conv"][0]),
+                      "h": jnp.zeros_like(cache["h"][0])}
+        if hybrid:
+            s_buf = cache["attn_k"].shape[2]
+            H, Hkv, hd = cfg.attn_dims
+
+        def body(carry, inp):
+            x, = carry
+            params_l, idx = inp
+            h = L.apply_norm(cfg, x, params_l["ln1"])
+            y, st = fwd(cfg, params_l["ssm"], h, state=zero_state)
+            x = x + y
+            ys = {"conv": st["conv"], "h": st["h"]}
+            if hybrid:
+                def attn_branch(x):
+                    h = L.apply_norm(cfg, x, shared["ln1"])
+                    q, k, v = A.qkv_project(cfg, shared["attn"], h, positions)
+                    out = A.attention_core(
+                        q, k, v, q_positions=positions, causal=True,
+                        window=cfg.sliding_window,
+                        q_chunk=cfg.attn_q_chunk, flash_vjp=cfg.flash_vjp)
+                    x = x + out.reshape(B, S, H * hd) @ shared["attn"]["wo"]
+                    hh = L.apply_norm(cfg, x, shared["ln2"])
+                    x = x + mlp_block(cfg, shared["mlp"], hh)
+                    return x, _fit(k, s_buf, axis=1), _fit(v, s_buf, axis=1)
+
+                def skip_branch(x):
+                    z = jnp.zeros((B, s_buf, Hkv, hd), x.dtype)
+                    return x, z, z
+
+                x, kk, vv = jax.lax.cond(idx % cfg.attn_every == 0,
+                                         attn_branch, skip_branch, x)
+                ys["kk"] = kk
+                ys["vv"] = vv
+            return (x,), ys
+
+        if cfg.scan_layers:
+            (x,), ys = jax.lax.scan(body, (x,),
+                                    (params["layers"],
+                                     jnp.arange(cfg.num_layers)))
+        else:
+            carry, outs = (x,), []
+            for i in range(cfg.num_layers):
+                params_l = jax.tree_util.tree_map(lambda t: t[i],
+                                                  params["layers"])
+                carry, y_out = body(carry, (params_l, jnp.asarray(i)))
+                outs.append(y_out)
+            (x,) = carry
+            ys = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+        cache["conv"] = ys["conv"].astype(cache["conv"].dtype)
+        cache["h"] = ys["h"]
+        if hybrid:
+            sel = jnp.arange(0, cfg.num_layers, cfg.attn_every)
+            # ring-align: slot i of the window buffer must hold absolute
+            # position (S - s_buf + i) ... which is (S - s_buf + i) % s_buf
+            # in ring coordinates. Roll the linear tail accordingly.
+            shift = S % s_buf if S > s_buf else 0
+            cache["attn_k"] = jnp.roll(
+                ys["kk"][sel].astype(cache["attn_k"].dtype), shift, axis=2)
+            cache["attn_v"] = jnp.roll(
+                ys["vv"][sel].astype(cache["attn_v"].dtype), shift, axis=2)
+        cache["pos"] = jnp.full((B,), S, jnp.int32)
+        logits = self.logits(params, x[:, -1:])[:, 0]
+        return logits, cache
+
+
+def _fit(x, cap: int, *, axis: int):
+    """Pad or crop x to capacity along axis (prefill -> decode cache)."""
+    S = x.shape[axis]
+    if S == cap:
+        return x
+    if S > cap:
+        idx = [slice(None)] * x.ndim
+        idx[axis] = slice(S - cap, S)
+        return x[tuple(idx)]
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, cap - S)
+    return jnp.pad(x, pad)

@@ -1,0 +1,29 @@
+"""Dense MLP sub-block (gated SiLU/GELU or plain), used by dense archs,
+MoE shared experts, encoder-decoder and the hybrid's shared block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_mlp(key, cfg, d: int, ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"wi": L.dense_init(ks[0], d, ff, dtype),
+         "wo": L.dense_init(ks[1], ff, d, dtype)}
+    if L.gated(cfg):
+        p["wg"] = L.dense_init(ks[2], d, ff, dtype)
+    return p
+
+
+def mlp_block(cfg, p, x) -> jnp.ndarray:
+    act = L.act_fn(cfg)
+    h = x @ p["wi"]
+    if "wg" in p:
+        h = act(x @ p["wg"]) * h
+    else:
+        h = act(h)
+    return h @ p["wo"]

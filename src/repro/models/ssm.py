@@ -1,0 +1,297 @@
+"""Selective state-space blocks: Mamba-1 (falcon-mamba-7b) and Mamba-2/SSD
+(zamba2-7b), with chunked parallel training scans and O(1)-state decode.
+
+TPU adaptation notes (DESIGN.md §2): the CUDA reference implements the
+selective scan as a fused SRAM kernel; on TPU we express the same
+recurrence as a *chunked associative scan* — `lax.associative_scan`
+within VMEM-sized chunks, `lax.scan` carrying the (d_inner, N) state
+across chunks. XLA maps the inner scan onto vector units; the chunk size
+bounds the materialized (B, T, d_inner, N) working set.
+
+Recurrences:
+  mamba1: h_t = exp(dt_t ⊙ A) h_{t-1} + dt_t·B_t ⊗ x_t ;  y_t = C_t·h_t + D⊙x_t
+          (A (d_in, N) diagonal-real, dt per channel)
+  mamba2: per head, scalar decay a_t = exp(dt_t·A_h):
+          H_t = a_t H_{t-1} + dt_t · x_t ⊗ B_t ;            y_t = H_t C_t + D⊙x_t
+          (H (hd, N); B,C shared across heads within a group)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ------------------------------------------------------------- causal conv1d
+
+def causal_conv1d(x, w, b, *, state=None):
+    """Depthwise causal conv. x (B, S, C), w (K, C), b (C,).
+
+    state (B, K-1, C) carries the left context for decode; returns
+    (y, new_state).
+    """
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    # depthwise: sum_k w[k, c] * xp[:, t + k, c]
+    y = sum(w[i].astype(jnp.float32) * xp[:, i:i + S].astype(jnp.float32)
+            for i in range(K))
+    y = y + b.astype(jnp.float32)
+    new_state = xp[:, -(K - 1):] if K > 1 else jnp.zeros((B, 0, C), x.dtype)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------- mamba1
+
+def init_mamba1(key, cfg, dtype) -> dict:
+    d, din, N = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    R = cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (din, 1))
+    return {
+        "in_proj": L.dense_init(ks[0], d, 2 * din, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, din), jnp.float32)
+                   * (1.0 / cfg.ssm_conv ** 0.5)).astype(jnp.float32),
+        "conv_b": jnp.zeros((din,), jnp.float32),
+        "x_proj": L.dense_init(ks[2], din, R + 2 * N, dtype),
+        "dt_proj": L.dense_init(ks[3], R, din, jnp.float32, scale=R ** 0.5 / R),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of U(1e-3, 1e-1)
+            jax.random.uniform(ks[4], (din,), jnp.float32, 1e-3, 1e-1))),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((din,), jnp.float32),
+        "out_proj": L.dense_init(ks[5], din, d, dtype),
+    }
+
+
+def _scan_diag(decay, inp, h0, chunk: int):
+    """h_t = decay_t * h_{t-1} + inp_t over axis 1 (seq), chunked.
+
+    decay/inp: (B, S, ...) f32. h0: (B, ...). Returns (h_all (B,S,...), h_S).
+
+    NOTE: materializes (B, S, ...state) — use only for short S (smoke
+    tests / oracles). Production paths stream chunks (see
+    ``mamba1_forward``), which never hold more than one chunk of states.
+    """
+    B, S = inp.shape[:2]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    dec_c = decay.reshape((B, nc, chunk) + decay.shape[2:])
+    inp_c = inp.reshape((B, nc, chunk) + inp.shape[2:])
+
+    def combine(a, b):
+        # composition of h -> d*h + i maps
+        da, ia = a
+        db, ib = b
+        return da * db, db * ia + ib
+
+    def outer(h, xs):
+        dc, ic = xs                                  # (B, chunk, ...)
+        dstar, istar = jax.lax.associative_scan(combine, (dc, ic), axis=1)
+        h_all = dstar * h[:, None] + istar           # (B, chunk, ...)
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(
+        outer, h0, (jnp.moveaxis(dec_c, 1, 0), jnp.moveaxis(inp_c, 1, 0)))
+    h_all = jnp.moveaxis(h_chunks, 0, 1).reshape((B, S) + inp.shape[2:])
+    return h_all, h_last
+
+
+def _chunk(x, nc: int, c: int):
+    """(B, S, ...) -> (nc, B, c, ...) scan-major chunking."""
+    B, S = x.shape[:2]
+    return jnp.moveaxis(x.reshape((B, nc, c) + x.shape[2:]), 1, 0)
+
+
+def _pad_seq(x, pad: int):
+    if pad == 0:
+        return x
+    cfgpad = [(0, 0)] * x.ndim
+    cfgpad[1] = (0, pad)
+    return jnp.pad(x, cfgpad)
+
+
+def mamba1_forward(cfg, p, x, *, state=None, chunk: int = 64):
+    """x (B,S,d). state: None (train/prefill) or dict(conv, h) for decode.
+
+    Returns (y (B,S,d), new_state or None if state is None).
+    """
+    B, S, d = x.shape
+    din, N = cfg.ssm_d_inner, cfg.ssm_state
+    R = cfg.dt_rank
+
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                # (B,S,din)
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = causal_conv1d(xs, p["conv_w"], p["conv_b"],
+                                 state=conv_state)
+    xs = jax.nn.silu(xs)
+
+    dbc = xs @ p["x_proj"]
+    dt, Bc, Cc = jnp.split(dbc, [R, R + N], axis=-1)  # (B,S,R),(B,S,N),(B,S,N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) @ p["dt_proj"]
+                         + p["dt_bias"])             # (B,S,din)
+    A = -jnp.exp(p["A_log"])                         # (din, N)
+    xf = xs.astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((B, din, N), jnp.float32))
+    if S == 1:   # decode: single recurrence step, no scan machinery
+        decay = jnp.exp(dt[:, 0, :, None] * A)       # (B,din,N)
+        inp = (dt[:, 0] * xf[:, 0])[..., None] * Bf[:, 0, :][:, None, :]
+        h_last = decay * h0 + inp
+        y = jnp.einsum("bdn,bn->bd", h_last, Cf[:, 0])[:, None]
+    else:
+        # Streaming chunked scan: never materializes more than ONE chunk
+        # of (B, c, din, N) states (DESIGN.md §2 — the TPU analogue of the
+        # CUDA fused selective scan's SRAM residency).
+        c = min(chunk, S)
+        pad = (-S) % c
+        nc = (S + pad) // c
+        dt_c = _chunk(_pad_seq(dt, pad), nc, c)       # (nc,B,c,din)
+        x_c = _chunk(_pad_seq(xf, pad), nc, c)
+        B_c = _chunk(_pad_seq(Bf, pad), nc, c)        # (nc,B,c,N)
+        C_c = _chunk(_pad_seq(Cf, pad), nc, c)
+
+        def body(h, inp_c):
+            dtc, xc, bc, cc = inp_c
+            decay = jnp.exp(dtc[..., None] * A)       # (B,c,din,N)
+            inp = (dtc * xc)[..., None] * bc[..., None, :]
+            dstar, istar = jax.lax.associative_scan(
+                lambda a, b: (a[0] * b[0], b[0] * a[1] + b[1]),
+                (decay, inp), axis=1)
+            h_all = dstar * h[:, None] + istar
+            yc = jnp.einsum("bcdn,bcn->bcd", h_all, cc)
+            return h_all[:, -1], yc
+
+        body = jax.checkpoint(body)
+        h_last, y_c = jax.lax.scan(body, h0, (dt_c, x_c, B_c, C_c))
+        y = jnp.moveaxis(y_c, 0, 1).reshape(B, (S + pad), din)[:, :S]
+
+    y = y + p["D"] * xf
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y.astype(x.dtype) @ p["out_proj"]
+
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "h": h_last}
+    return y, new_state
+
+
+# ---------------------------------------------------------------- mamba2
+
+def init_mamba2(key, cfg, dtype) -> dict:
+    d, din, N = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    heads = din // cfg.ssm_head_dim
+    G = cfg.ssm_groups
+    dxbc = din + 2 * G * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": L.dense_init(ks[0], d, 2 * din + 2 * G * N + heads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, dxbc), jnp.float32)
+                   * (1.0 / cfg.ssm_conv ** 0.5)).astype(jnp.float32),
+        "conv_b": jnp.zeros((dxbc,), jnp.float32),
+        "A_log": jnp.log(jax.random.uniform(ks[2], (heads,), jnp.float32,
+                                            1.0, 16.0)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jax.random.uniform(ks[3], (heads,), jnp.float32, 1e-3, 1e-1))),
+        "D": jnp.ones((heads,), jnp.float32),
+        "norm_scale": jnp.ones((din,), jnp.float32),
+        "out_proj": L.dense_init(jax.random.fold_in(key, 9), din, d, dtype),
+    }
+
+
+def mamba2_forward(cfg, p, x, *, state=None, chunk: int = 64):
+    """SSD block. x (B,S,d) -> (y (B,S,d), new_state)."""
+    B, S, d = x.shape
+    din, N = cfg.ssm_d_inner, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    heads = din // hd
+    G = cfg.ssm_groups
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * G * N], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = causal_conv1d(xbc, p["conv_w"], p["conv_b"],
+                                  state=conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, Bc, Cc = jnp.split(xbc, [din, din + G * N], axis=-1)
+    xs = xs.reshape(B, S, heads, hd)
+    Bc = Bc.reshape(B, S, G, N)
+    Cc = Cc.reshape(B, S, G, N)
+    rep = heads // G
+    Bh = jnp.repeat(Bc, rep, axis=2)                 # (B,S,heads,N)
+    Ch = jnp.repeat(Cc, rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,heads)
+    A = -jnp.exp(p["A_log"])                          # (heads,)
+    xf = xs.astype(jnp.float32)
+    Bf = Bh.astype(jnp.float32)
+    Cf = Ch.astype(jnp.float32)
+
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((B, heads, hd, N), jnp.float32))
+    if S == 1:
+        decay = jnp.exp(dt[:, 0] * A)                 # (B,heads)
+        inp = jnp.einsum("bh,bhd,bhn->bhdn", dt[:, 0], xf[:, 0], Bf[:, 0])
+        h_last = decay[..., None, None] * h0 + inp
+        y = jnp.einsum("bhdn,bhn->bhd", h_last, Cf[:, 0])[:, None]
+    else:
+        # SSD chunked matmul form (Mamba-2 paper §6, TPU adaptation):
+        # within a chunk the scalar-per-head decay factorizes, so the
+        # intra-chunk contribution is an attention-like (c x c) matmul —
+        # MXU work instead of a length-S recurrence — and only the (c x c)
+        # weights + (B,heads,hd,N) chunk states are ever materialized.
+        c = min(chunk, S)
+        pad = (-S) % c
+        nc = (S + pad) // c
+        dt_c = _chunk(_pad_seq(dt, pad), nc, c)       # (nc,B,c,h)
+        x_c = _chunk(_pad_seq(xf, pad), nc, c)        # (nc,B,c,h,hd)
+        B_c = _chunk(_pad_seq(Bf, pad), nc, c)        # (nc,B,c,h,N)
+        C_c = _chunk(_pad_seq(Cf, pad), nc, c)
+
+        tri = jnp.tril(jnp.ones((c, c), jnp.float32))  # s <= t
+
+        def body(h, inp_c):
+            dtc, xc, bc, cc = inp_c                   # (B,c,h[,d|n])
+            ldec = jnp.cumsum(dtc * A, axis=1)        # (B,c,h) log-decay, <=0
+            # intra-chunk: W[t,s] = exp(l_t - l_s) * (C_t . B_s) * dt_s, s<=t
+            # mask BEFORE exp: for s > t the exponent is POSITIVE and can
+            # overflow to inf once dt grows — inf * 0 = NaN (seen after 2
+            # LARS steps on zamba2); exp(-inf) = 0 is the safe zero.
+            diff = ldec[:, :, None] - ldec[:, None, :, :]            # (B,t,s,h)
+            gate = jnp.exp(jnp.where(tri[None, :, :, None], diff, -jnp.inf))
+            G = jnp.einsum("bthn,bshn->btsh", cc, bc)
+            W = G * gate * dtc[:, None]               # (B,t,s,h)
+            y_intra = jnp.einsum("btsh,bshd->bthd", W, xc)
+            # inter-chunk: carried state read through C with decay exp(l_t)
+            y_inter = jnp.exp(ldec)[..., None] * \
+                jnp.einsum("bthn,bhdn->bthd", cc, h)
+            # state update: H' = exp(l_end) H + sum_s exp(l_end-l_s) dt_s x_s⊗B_s
+            l_end = ldec[:, -1]                       # (B,h)
+            w_s = jnp.exp(l_end[:, None] - ldec) * dtc  # (B,c,h)
+            h_new = jnp.exp(l_end)[..., None, None] * h + \
+                jnp.einsum("bch,bchd,bchn->bhdn", w_s, xc, bc)
+            return h_new, y_intra + y_inter
+
+        body = jax.checkpoint(body)
+        h_last, y_c = jax.lax.scan(body, h0, (dt_c, x_c, B_c, C_c))
+        y = jnp.moveaxis(y_c, 0, 1).reshape(B, S + pad, heads, hd)[:, :S]
+
+    y = y + p["D"][:, None] * xf
+    y = y.reshape(B, S, din)
+    y = y * jax.nn.silu(z.astype(jnp.float32))        # gated
+    y = L.rmsnorm(y.astype(x.dtype), p["norm_scale"], cfg.norm_eps)
+    y = y @ p["out_proj"]
+
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "h": h_last}
+    return y, new_state

@@ -1,0 +1,5 @@
+"""Serving runtime: prefill/decode step factories over the models' KV/SSM
+caches, and a batched greedy-decode engine."""
+
+from repro.serve.engine import (make_prefill_step, make_serve_step,  # noqa: F401
+                                DecodeEngine)

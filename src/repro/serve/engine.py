@@ -1,0 +1,82 @@
+"""Batched serving: prefill (prompt -> cache) and serve_step (ONE token
+against a seq_len cache — the dry-run decode workload), plus a greedy
+engine for the examples.
+
+All steps are pure functions of (params, cache, tokens) so they jit/pjit
+directly; the cache pytree is the sharded, persistent object.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def make_prefill_step(model, cfg=None) -> Callable:
+    """(params, batch) -> (last-token logits (B, V), cache).
+
+    batch: {"tokens"} (+"frames" encdec, +"image_embeddings" vlm).
+    ``cache_len`` fixes the decode-cache capacity (defaults to prompt len).
+    """
+    cfg = cfg if cfg is not None else model.cfg
+
+    def step(params, batch, *, cache_len: Optional[int] = None):
+        kw = {}
+        if cfg.family == "encdec":
+            kw["frames"] = batch["frames"]
+        if cfg.family == "vlm":
+            kw["image_embeddings"] = batch["image_embeddings"]
+        return model.prefill(params, batch["tokens"], cache_len=cache_len,
+                             **kw)
+
+    return step
+
+
+def make_serve_step(model, cfg=None) -> Callable:
+    """(params, cache, tokens (B,1)) -> (logits (B,1,V), new cache).
+
+    ONE new token against the standing cache — the decode_32k / long_500k
+    dry-run workload.
+    """
+    cfg = cfg if cfg is not None else model.cfg
+
+    def step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return step
+
+
+class DecodeEngine:
+    """Greedy batched decoding for the serving example.
+
+    prefill once, then step the jitted single-token decode; the cache
+    stays on device (donated through the jit) the whole time.
+    """
+
+    def __init__(self, model, params, cfg=None):
+        self.model = model
+        self.cfg = cfg if cfg is not None else model.cfg
+        self.params = params
+        self._prefill = jax.jit(make_prefill_step(model, self.cfg),
+                                static_argnames=("cache_len",))
+        self._step = jax.jit(make_serve_step(model, self.cfg),
+                             donate_argnums=(1,))
+
+    def generate(self, batch, *, max_new_tokens: int,
+                 cache_len: Optional[int] = None) -> jnp.ndarray:
+        """Returns generated tokens (B, max_new_tokens)."""
+        prompt = batch["tokens"]
+        B, S = prompt.shape
+        cap = cache_len or (S + max_new_tokens)
+        logits, cache = self._prefill(self.params, batch, cache_len=cap)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out = [tok]
+        for _ in range(max_new_tokens - 1):
+            logits, cache = self._step(self.params, cache, tok)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,12 @@
+"""Training runtime: TrainState, jitted step factories for every model
+family, losses/metrics (incl. the paper's generalization error), and the
+host-side loop.
+"""
+
+from repro.train.state import TrainState, create_train_state  # noqa: F401
+from repro.train.losses import (softmax_cross_entropy,  # noqa: F401
+                                lm_loss, classification_loss)
+from repro.train.metrics import accuracy, generalization_error  # noqa: F401
+from repro.train.step import (make_train_step, make_eval_step,  # noqa: F401
+                              make_lm_train_step, make_lm_eval_step)
+from repro.train.loop import train_loop  # noqa: F401

@@ -1,0 +1,41 @@
+"""Host-side training loop: jit the step once, stream batches, collect
+metrics. Used by the examples and the paper-sweep benchmark."""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+def train_loop(step_fn: Callable, state, batches: Iterator,
+               num_steps: int, *, log_every: int = 0,
+               eval_fn: Optional[Callable] = None,
+               eval_batches: Optional[list] = None,
+               jit: bool = True) -> tuple[Any, list[dict]]:
+    """Run ``num_steps`` steps. Returns (final state, history)."""
+    if jit:
+        step_fn = jax.jit(step_fn)
+    history: list[dict] = []
+    t0 = time.perf_counter()
+    for i in range(num_steps):
+        batch = next(batches)
+        state, metrics = step_fn(state, batch)
+        if log_every and (i % log_every == 0 or i == num_steps - 1):
+            m = {k: float(v) for k, v in metrics.items()}
+            m["wall_s"] = time.perf_counter() - t0
+            history.append(m)
+            print(f"  step {i:5d}  loss {m['loss']:.4f}  "
+                  f"({m['wall_s']:.1f}s)", flush=True)
+    if eval_fn is not None and eval_batches:
+        accs, losses = [], []
+        efn = jax.jit(eval_fn) if jit else eval_fn
+        for eb in eval_batches:
+            em = efn(state.params, eb)
+            accs.append(float(em["accuracy"]))
+            losses.append(float(em["loss"]))
+        history.append({"eval_accuracy": float(np.mean(accs)),
+                        "eval_loss": float(np.mean(losses))})
+    return state, history

@@ -1,0 +1,83 @@
+"""Loss functions (f32 accumulation regardless of model compute dtype)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean masked NLL. logits (..., V) any float dtype; labels (...) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def classification_loss(logits: jnp.ndarray, labels: jnp.ndarray
+                        ) -> jnp.ndarray:
+    """The paper's loss: softmax cross-entropy on the class head."""
+    return softmax_cross_entropy(logits, labels)
+
+
+def chunked_lm_loss(hidden: jnp.ndarray, w: jnp.ndarray,
+                    tokens: jnp.ndarray, *, chunk: int) -> jnp.ndarray:
+    """Next-token loss WITHOUT materializing (B, S, V) logits.
+
+    hidden (B, S, d) post-final-norm, aligned with tokens (B, S) (any
+    bidirectional prefix already sliced off by the caller); w (d, V).
+    The vocab matmul + NLL run inside a checkpointed scan over sequence
+    chunks, so only one (B, chunk, V) logits tile is ever live (fwd AND
+    bwd) — the big-vocab (152k-257k) train-memory fix recorded in §Perf.
+    """
+    B, S, d = hidden.shape
+    hs = hidden[:, :-1]
+    tg = tokens[:, 1:]
+    valid = jnp.ones_like(tg, jnp.float32)
+    Sm = hs.shape[1]
+    c = min(chunk, Sm)
+    pad = (-Sm) % c
+    if pad:
+        hs = jnp.pad(hs, ((0, 0), (0, pad), (0, 0)))
+        tg = jnp.pad(tg, ((0, 0), (0, pad)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    nc = (Sm + pad) // c
+
+    def piece(h_c, t_c, v_c):
+        logits = (h_c @ w).astype(jnp.float32)          # (B, c, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, t_c[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - ll) * v_c), jnp.sum(v_c)
+
+    piece = jax.checkpoint(piece)
+
+    def body(acc, inp):
+        s, n = piece(*inp)
+        return (acc[0] + s, acc[1] + n), None
+
+    xs = (jnp.moveaxis(hs.reshape(B, nc, c, d), 1, 0),
+          jnp.moveaxis(tg.reshape(B, nc, c), 1, 0),
+          jnp.moveaxis(valid.reshape(B, nc, c), 1, 0))
+    (tot, n), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), xs)
+    return tot / jnp.maximum(n, 1.0)
+
+
+def lm_loss(logits: jnp.ndarray, tokens: jnp.ndarray, *,
+            prefix_len: int = 0) -> jnp.ndarray:
+    """Next-token loss. logits (B, S, V) aligned with tokens (B, S):
+    predict tokens[:, t+1] from logits[:, t]. ``prefix_len`` masks the
+    bidirectional image/audio prefix positions (VLM)."""
+    lg = logits[:, :-1]
+    tg = tokens[:, 1:]
+    mask = None
+    if prefix_len:
+        pos = jnp.arange(lg.shape[1])
+        mask = jnp.broadcast_to(pos >= prefix_len, tg.shape)
+    return softmax_cross_entropy(lg, tg, mask)

@@ -1,0 +1,17 @@
+"""Evaluation metrics — the paper's three (§4.2): test accuracy, train
+accuracy, and generalization error (train acc − test acc)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Top-1 accuracy; logits (..., V), labels (...)."""
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels)
+                    .astype(jnp.float32))
+
+
+def generalization_error(train_acc: float, test_acc: float) -> float:
+    """Paper §4.2: difference between training and test accuracy."""
+    return float(train_acc) - float(test_acc)

@@ -1,0 +1,24 @@
+"""TrainState: the single pytree carried across steps.
+
+The ``stacked`` marker (which leaves are (L, ...) layer stacks) is STATIC
+per architecture — it lives on the factory closure, not in the state, so
+the state stays a pure array pytree (shardable, checkpointable).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+from repro.core.optim_base import OptState
+
+Pytree = Any
+
+
+class TrainState(NamedTuple):
+    params: Pytree
+    opt_state: OptState
+
+
+def create_train_state(model, optimizer, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt_state=optimizer.init(params))

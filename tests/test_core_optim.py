@@ -1,0 +1,239 @@
+"""Unit + property tests for the optimizer core (the paper's technique)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lars, lamb, sgd, adamw, schedules, scaling
+from repro.core import trust_ratio as tr
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _tree_allclose(a, b, **kw):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw),
+        a, b)
+
+
+# ---------------------------------------------------------------- trust ratio
+
+def test_lars_trust_ratio_matches_paper_eq3():
+    w = jnp.array([[3.0, 4.0]])           # ||w|| = 5
+    g = jnp.array([[0.0, 12.0]])          # ||g|| = 12
+    wn, gn = tr.layer_norms(w, g, stacked=False)
+    np.testing.assert_allclose(wn, 5.0, rtol=1e-6)
+    np.testing.assert_allclose(gn, 12.0, rtol=1e-6)
+    eta, beta = 0.001, 1e-4
+    ratio = tr.lars_trust_ratio(wn, gn, eta=eta, weight_decay=beta)
+    expected = eta * 5.0 / (12.0 + beta * 5.0 + 1e-9)
+    np.testing.assert_allclose(ratio, expected, rtol=1e-6)
+
+
+def test_trust_ratio_guards_zero_norms():
+    z = jnp.zeros(())
+    one = jnp.ones(())
+    assert tr.lars_trust_ratio(z, one, eta=0.001, weight_decay=0.0) == 1.0
+    assert tr.lars_trust_ratio(one, z, eta=0.001, weight_decay=0.0) == 1.0
+    assert np.isfinite(float(tr.lamb_trust_ratio(z, z)))
+
+
+def test_stacked_norms_are_per_slice():
+    w = jnp.stack([jnp.full((4,), 1.0), jnp.full((4,), 2.0)])  # (L=2, 4)
+    g = jnp.ones_like(w)
+    wn, gn = tr.layer_norms(w, g, stacked=True)
+    assert wn.shape == (2,)
+    np.testing.assert_allclose(wn, [2.0, 4.0], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------- LARS
+
+def test_lars_first_step_matches_manual_math():
+    eta, beta, mu, lr = 0.001, 1e-4, 0.9, 0.5
+    opt = lars(lr, momentum=mu, weight_decay=beta, trust_coefficient=eta)
+    params = {"w": jnp.array([[3.0, 4.0]])}
+    grads = {"w": jnp.array([[0.0, 12.0]])}
+    state = opt.init(params)
+    new_params, new_state = opt.update(grads, state, params)
+
+    w, g = np.array([[3.0, 4.0]]), np.array([[0.0, 12.0]])
+    lam = eta * 5.0 / (12.0 + beta * 5.0 + 1e-9)
+    m = lr * lam * (g + beta * w)   # momentum starts at 0
+    expected = w - m
+    np.testing.assert_allclose(new_params["w"], expected, rtol=1e-6)
+    np.testing.assert_allclose(new_state.slots["momentum"]["w"], m, rtol=1e-6)
+    assert int(new_state.step) == 1
+
+
+def test_lars_stacked_equals_per_layer_loop():
+    """A stacked (L,...) leaf must behave exactly like L separate leaves."""
+    key = jax.random.PRNGKey(0)
+    L, d1, d2 = 3, 5, 7
+    w = jax.random.normal(key, (L, d1, d2))
+    g = jax.random.normal(jax.random.PRNGKey(1), (L, d1, d2))
+
+    opt = lars(0.1)
+    # stacked: one leaf
+    st_params = {"w": w}
+    st_state = opt.init(st_params)
+    st_new, _ = opt.update({"w": g}, st_state, st_params, stacked={"w": True})
+
+    # loop: L leaves
+    lp_params = {f"w{i}": w[i] for i in range(L)}
+    lp_state = opt.init(lp_params)
+    lp_new, _ = opt.update({f"w{i}": g[i] for i in range(L)},
+                           lp_state, lp_params)
+    for i in range(L):
+        np.testing.assert_allclose(st_new["w"][i], lp_new[f"w{i}"],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_lars_skips_1d_params():
+    """Biases/norm scales get trust ratio 1 (plain decayed-SGD step)."""
+    opt = lars(0.5, momentum=0.0, weight_decay=0.0, trust_coefficient=0.001)
+    params = {"b": jnp.array([1.0, -2.0])}
+    grads = {"b": jnp.array([10.0, 10.0])}
+    state = opt.init(params)
+    new_params, _ = opt.update(grads, state, params)
+    # no adaptation: w - lr * g
+    np.testing.assert_allclose(new_params["b"],
+                               np.array([1.0, -2.0]) - 0.5 * 10.0, rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(scale=st.floats(0.01, 100.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_lars_update_invariant_to_grad_scale(scale, seed):
+    """With wd=0, momentum=0: step = lr*eta*||w||*g/||g|| — invariant to
+    rescaling g. This is THE property that makes LARS large-batch robust
+    (gradient-norm explosion at large batch does not change step size)."""
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (4, 6)) + 0.1
+    g = jax.random.normal(jax.random.PRNGKey(seed + 1), (4, 6))
+    opt = lars(0.1, momentum=0.0, weight_decay=0.0, eps=0.0)
+    s = opt.init({"w": w})
+    p1, _ = opt.update({"w": g}, s, {"w": w})
+    p2, _ = opt.update({"w": g * scale}, s, {"w": w})
+    np.testing.assert_allclose(p1["w"], p2["w"], rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       eta=st.floats(1e-4, 0.1),
+       beta=st.floats(0.0, 0.1))
+def test_lars_step_norm_bounded(seed, eta, beta):
+    """First-step property: ||delta_w|| <= lr * eta * ||w|| * (1+beta...)
+    — the trust ratio bounds the relative step size."""
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (8, 8))
+    g = jax.random.normal(jax.random.PRNGKey(seed + 7), (8, 8)) * 100.0
+    lr = 1.0
+    opt = lars(lr, momentum=0.0, weight_decay=beta, trust_coefficient=eta)
+    s = opt.init({"w": w})
+    new, _ = opt.update({"w": g}, s, {"w": w})
+    dw = np.asarray(new["w"] - w)
+    w_norm = float(jnp.linalg.norm(w))
+    g_norm = float(jnp.linalg.norm(g))
+    lam = eta * w_norm / (g_norm + beta * w_norm + 1e-9)
+    bound = lr * lam * (g_norm + beta * w_norm) * 1.01 + 1e-6
+    assert np.linalg.norm(dw) <= bound
+    # relative step is bounded by lr*eta (+ tiny slack)
+    assert np.linalg.norm(dw) / w_norm <= lr * eta * 1.02 + 1e-6
+
+
+# ----------------------------------------------------------------------- SGD
+
+def test_sgd_matches_manual_math_two_steps():
+    mu, beta, lr = 0.9, 0.01, 0.1
+    opt = sgd(lr, momentum=mu, weight_decay=beta)
+    w = np.array([1.0, 2.0], np.float32).reshape(1, 2)
+    g = np.array([0.5, -0.5], np.float32).reshape(1, 2)
+    params = {"w": jnp.asarray(w)}
+    state = opt.init(params)
+
+    m = np.zeros_like(w)
+    wm = w.copy()
+    for _ in range(2):
+        params, state = opt.update({"w": jnp.asarray(g)}, state, params)
+        m = mu * m + (g + beta * wm)
+        wm = wm - lr * m
+    np.testing.assert_allclose(params["w"], wm, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------- LAMB
+
+def test_lamb_first_step_is_signlike_and_bounded():
+    opt = lamb(0.1, weight_decay=0.0)
+    w = jax.random.normal(jax.random.PRNGKey(0), (16, 16))
+    g = jax.random.normal(jax.random.PRNGKey(1), (16, 16)) * 1e3
+    s = opt.init({"w": w})
+    new, _ = opt.update({"w": g}, s, {"w": w})
+    dw = np.asarray(new["w"] - w)
+    # trust ratio normalizes: relative step ~ lr regardless of grad scale
+    rel = np.linalg.norm(dw) / float(jnp.linalg.norm(w))
+    assert rel <= 0.1 * 1.05
+
+
+def test_lamb_stacked_equals_per_layer_loop():
+    L = 2
+    w = jax.random.normal(jax.random.PRNGKey(0), (L, 4, 4))
+    g = jax.random.normal(jax.random.PRNGKey(1), (L, 4, 4))
+    opt = lamb(0.01)
+    st_new, _ = opt.update({"w": g}, opt.init({"w": w}), {"w": w},
+                           stacked={"w": True})
+    lp_params = {f"w{i}": w[i] for i in range(L)}
+    lp_new, _ = opt.update({f"w{i}": g[i] for i in range(L)},
+                           opt.init(lp_params), lp_params)
+    for i in range(L):
+        np.testing.assert_allclose(st_new["w"][i], lp_new[f"w{i}"],
+                                   rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------- schedules
+
+def test_inverse_time_decay_matches_table1():
+    sch = schedules.inverse_time_decay(0.01, 1e-4)
+    np.testing.assert_allclose(sch(jnp.asarray(0)), 0.01, rtol=1e-6)
+    np.testing.assert_allclose(sch(jnp.asarray(10000)), 0.01 / 2.0, rtol=1e-6)
+
+
+def test_warmup_is_monotone_then_joins_schedule():
+    base = schedules.constant(0.3)
+    sch = schedules.with_warmup(base, warmup_steps=10)
+    vals = [float(sch(jnp.asarray(i))) for i in range(15)]
+    assert all(vals[i] <= vals[i + 1] + 1e-7 for i in range(9))
+    np.testing.assert_allclose(vals[12], 0.3, rtol=1e-6)
+
+
+def test_polynomial_decay_endpoints():
+    sch = schedules.polynomial_decay(1.0, total_steps=100, power=2.0)
+    np.testing.assert_allclose(sch(jnp.asarray(0)), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(sch(jnp.asarray(100)), 0.0, atol=1e-7)
+    np.testing.assert_allclose(sch(jnp.asarray(50)), 0.25, rtol=1e-6)
+
+
+def test_scaling_policies():
+    assert scaling.scaled_lr(0.1, 256, 1024, "linear") == pytest.approx(0.4)
+    assert scaling.scaled_lr(0.1, 256, 1024, "sqrt") == pytest.approx(0.2)
+    assert scaling.scaled_lr(0.1, 256, 1024, "none") == pytest.approx(0.1)
+
+
+# ------------------------------------------------------------------ generic
+
+@pytest.mark.parametrize("make", [
+    lambda: sgd(0.1), lambda: lars(0.1), lambda: lamb(0.1),
+    lambda: adamw(0.1)])
+def test_optimizers_are_jittable_and_finite(make):
+    opt = make()
+    params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,)),
+              "stack": jnp.ones((3, 4, 4))}
+    grads = jax.tree_util.tree_map(lambda p: jnp.full_like(p, 0.5), params)
+    stacked = {"w": False, "b": False, "stack": True}
+    state = opt.init(params)
+    upd = jax.jit(lambda g, s, p: opt.update(g, s, p, stacked=stacked))
+    for _ in range(3):
+        params, state = upd(grads, state, params)
+    for leaf in jax.tree_util.tree_leaves(params):
+        assert np.all(np.isfinite(np.asarray(leaf)))

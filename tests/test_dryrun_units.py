@@ -1,0 +1,65 @@
+"""Dry-run machinery unit tests (no 512-device compiles): MODEL_FLOPS
+accounting, probe extrapolation linearity, reduced-config invariants."""
+
+import jax
+import pytest
+
+from repro.configs import ARCHS, get_config, get_shape, param_count
+from repro.launch.dryrun import _model_flops
+
+
+def test_param_count_orders_of_magnitude():
+    """Analytic counts should land near the models' nameplate sizes."""
+    expect = {
+        "qwen2-72b": 72e9, "qwen3-14b": 14e9, "minitron-8b": 8e9,
+        "falcon-mamba-7b": 7e9, "zamba2-7b": 7e9, "smollm-135m": 135e6,
+        "deepseek-v2-236b": 236e9, "paligemma-3b": 2.6e9,  # text tower
+    }
+    for name, nominal in expect.items():
+        total, active = param_count(get_config(name))
+        assert 0.55 * nominal < total < 1.6 * nominal, \
+            (name, total, nominal)
+        assert active <= total
+
+
+def test_moe_active_less_than_total():
+    for name in ("deepseek-v2-236b", "granite-moe-3b-a800m"):
+        total, active = param_count(get_config(name))
+        assert active < 0.5 * total    # top-k of many experts
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("qwen3-14b")
+    f_train = _model_flops(cfg, get_shape("train_4k"))
+    f_dec = _model_flops(cfg, get_shape("decode_32k"))
+    # train: 6*N*B*S; decode: 2*N*B*1
+    assert f_train / f_dec == pytest.approx(
+        (6 * 4096 * 256) / (2 * 128), rel=1e-6)
+
+
+def test_model_flops_excludes_lookup_table():
+    cfg = get_config("minitron-8b")             # untied, 256k vocab
+    total, active = param_count(cfg)
+    f = _model_flops(cfg, get_shape("train_4k"))
+    n_used = f / (6 * 4096 * 256)
+    assert n_used == pytest.approx(active - cfg.vocab_size * cfg.d_model)
+
+
+def test_reduced_configs_within_caps():
+    for name, cfg in ARCHS.items():
+        r = cfg.reduced()
+        assert r.num_layers <= 2
+        assert r.d_model <= 512
+        assert r.num_experts <= 4
+        assert r.vocab_size <= 512
+        if cfg.num_heads:
+            assert r.num_heads % max(r.num_kv_heads, 1) == 0
+
+
+def test_probe_extrapolation_is_exactly_linear():
+    """The two-depth linear extrapolation recovers a linear cost model."""
+    k1, k2, L = 2, 4, 60
+    base, per = 7.0, 3.5
+    c1, c2 = base + k1 * per, base + k2 * per
+    total = c1 + (L - k1) * (c2 - c1) / (k2 - k1)
+    assert total == pytest.approx(base + L * per)
