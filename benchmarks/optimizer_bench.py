@@ -1,23 +1,36 @@
-"""Optimizer micro-benchmark: per-step overhead of SGD / LARS / LAMB
-(and the fused-Pallas LARS path) over realistic parameter pytrees.
+"""Optimizer micro-benchmark: per-step overhead of SGD / LARS / LAMB /
+AdamW over realistic parameter pytrees, per-leaf vs flat-packed.
 
 The paper's §6 'challenges' are optimizer-side overheads in SystemML
 (per-layer norm passes in the runtime). Here we quantify the analogous
-JAX-side cost: LARS adds two norm reductions + a broadcast per leaf over
-SGD; the fused kernel path collapses the 5-pass update into 2 passes.
+JAX-side cost on both substrate layouts:
+
+  * ``per-leaf``     — slots mirror the param pytree; per-leaf norms
+                       (the pjit/sharded reference path);
+  * ``flat-packed``  — the whole pytree lives in one superbuffer; norms
+                       are one segment-reduced pass;
+  * ``flat-packed+pallas`` (LARS) — the two megakernels: exactly 2
+                       kernel launches per step regardless of leaf count.
+
+Each row reports wall-clock ms/step AND the traced ``pallas_call``
+launch count (0 for pure-jnp paths) so the launch-count-vs-pytree-size
+story is measurable, not anecdotal.
 
 Usage: PYTHONPATH=src python -m benchmarks.optimizer_bench [--quick]
+       [--out BENCH_optimizer.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import adamw, lamb, lars, sgd
+from repro.kernels.introspect import count_pallas_launches
 
 
 def make_tree(n_layers: int, d: int, key) -> dict:
@@ -38,13 +51,20 @@ STACKED = {"embed": False,
            "unembed": False}
 
 
-def bench(opt, params, stacked, *, iters: int) -> float:
+def bench(opt, params, stacked, *, packed: bool, iters: int
+          ) -> tuple[float, int]:
+    """Returns (seconds/step, pallas launches/step)."""
     grads = jax.tree_util.tree_map(lambda p: 0.01 * p, params)
-    state = opt.init(params)
+    state = opt.init(params, stacked=stacked if packed else None)
+    marker = None if packed else stacked  # packed states carry the layout
+
+    launches = count_pallas_launches(
+        lambda g, s, p: opt.update(g, s, p, stacked=marker),
+        grads, state, params)
 
     @jax.jit
     def step(g, s, p):
-        return opt.update(g, s, p, stacked=stacked)
+        return opt.update(g, s, p, stacked=marker)
 
     p, s = step(grads, state, params)  # compile + warmup
     jax.block_until_ready(p)
@@ -52,34 +72,63 @@ def bench(opt, params, stacked, *, iters: int) -> float:
     for _ in range(iters):
         p, s = step(grads, s, p)
     jax.block_until_ready(p)
-    return (time.perf_counter() - t0) / iters
+    return (time.perf_counter() - t0) / iters, launches
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_optimizer.json",
+                    help="JSON output path ('' to skip)")
     args = ap.parse_args()
     n_layers, d = (4, 128) if args.quick else (16, 512)
     iters = 5 if args.quick else 20
 
     params = make_tree(n_layers, d, jax.random.key(0))
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
-    print(f"# optimizer bench: {n:,} params, {iters} iters")
-    rows = []
-    for name, opt in [
-        ("sgd", sgd(0.01, momentum=0.9)),
-        ("lars", lars(0.01)),
-        ("lars+pallas", lars(0.01, use_pallas=True)),
-        ("lamb", lamb(0.001)),
-        ("adamw", adamw(0.001)),
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+    print(f"# optimizer bench: {n:,} params, {n_leaves} leaves, "
+          f"{iters} iters")
+    records = []
+    for name, make in [
+        ("sgd", lambda: sgd(0.01, momentum=0.9)),
+        ("lars", lambda: lars(0.01)),
+        ("lars+pallas", lambda: lars(0.01, use_pallas=True)),
+        ("lamb", lambda: lamb(0.001)),
+        ("adamw", lambda: adamw(0.001)),
     ]:
-        dt = bench(opt, params, STACKED, iters=iters)
-        rows.append((name, dt))
-        print(f"{name:12s} {dt*1e3:8.2f} ms/step "
-              f"({n / dt / 1e9:6.2f} Gparam/s)", flush=True)
-    base = dict(rows)["sgd"]
-    print(f"LARS overhead vs SGD: "
-          f"{(dict(rows)['lars'] / base - 1) * 100:+.1f}%")
+        for path in ("per-leaf", "flat-packed"):
+            if name == "lars+pallas" and path == "per-leaf":
+                continue  # the megakernels require the packed layout
+            dt, launches = bench(make(), params, STACKED,
+                                 packed=(path == "flat-packed"),
+                                 iters=iters)
+            records.append({"optimizer": name, "path": path,
+                            "ms_per_step": dt * 1e3,
+                            "pallas_launches": launches,
+                            "gparam_per_s": n / dt / 1e9})
+            print(f"{name:12s} {path:12s} {dt*1e3:8.2f} ms/step "
+                  f"{launches:3d} launches "
+                  f"({n / dt / 1e9:6.2f} Gparam/s)", flush=True)
+
+    by = {(r["optimizer"], r["path"]): r["ms_per_step"] for r in records}
+    base = by[("sgd", "per-leaf")]
+    print(f"LARS (per-leaf) overhead vs SGD: "
+          f"{(by[('lars', 'per-leaf')] / base - 1) * 100:+.1f}%")
+    print(f"LARS flat-packed vs per-leaf: "
+          f"{(by[('lars', 'flat-packed')] / by[('lars', 'per-leaf')] - 1) * 100:+.1f}%")
+
+    if args.out:
+        payload = {
+            "bench": "optimizer",
+            "params": n, "leaves": n_leaves,
+            "n_layers": n_layers, "d_model": d, "iters": iters,
+            "backend": jax.default_backend(),
+            "results": records,
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -35,7 +35,10 @@ def main() -> None:
     cfg = get_config("qwen3-14b").reduced()
     model = build_model(cfg)
     opt = lars(0.05, trust_coefficient=0.01)
-    state = create_train_state(model, opt, jax.random.key(0))
+    # packed=False: per-leaf (tree) opt state, so momentum shards
+    # leaf-for-leaf with the FSDP params and the trust-ratio norms run
+    # over sharded leaves (XLA inserts the cross-shard reductions).
+    state = create_train_state(model, opt, jax.random.key(0), packed=False)
 
     sspecs = state_pspecs(cfg, jax.eval_shape(lambda: state), mesh)
     bspecs = batch_pspecs(cfg, mesh, batch=8)

@@ -13,30 +13,20 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.treepath import path_str
+
 Pytree = Any
 
 
 def _flatten(tree: Pytree) -> dict[str, np.ndarray]:
     flat = {}
-
-    def key_of(path) -> str:
-        parts = []
-        for p in path:
-            if hasattr(p, "key"):
-                parts.append(str(p.key))
-            elif hasattr(p, "idx"):
-                parts.append(str(p.idx))
-            else:
-                parts.append(str(p))
-        return "/".join(parts)
-
     for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
         arr = np.asarray(leaf)
         if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
             # numpy's npz cannot round-trip ml_dtypes (bf16/f8): store as
             # f32; restore casts back to the target leaf dtype.
             arr = arr.astype(np.float32)
-        flat[key_of(path)] = arr
+        flat[path_str(path)] = arr
     return flat
 
 
@@ -56,12 +46,6 @@ def restore_checkpoint(path: str, target: Pytree) -> Pytree:
     leaves_with_path = jax.tree_util.tree_leaves_with_path(target)
     treedef = jax.tree_util.tree_structure(target)
 
-    def key_of(path):
-        parts = []
-        for p in path:
-            parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
-        return "/".join(parts)
-
-    new_leaves = [stored[key_of(path)].astype(np.asarray(leaf).dtype)
+    new_leaves = [stored[path_str(path)].astype(np.asarray(leaf).dtype)
                   for path, leaf in leaves_with_path]
     return jax.tree_util.tree_unflatten(treedef, new_leaves)

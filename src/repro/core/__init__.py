@@ -4,12 +4,14 @@ baseline; LAMB — the paper's stated future work), plus LR schedules and
 large-batch scaling policies.
 """
 
-from repro.core.optim_base import Optimizer, OptState, apply_updates  # noqa: F401
+from repro.core.optim_base import (LayerwiseRule, Optimizer, OptState,  # noqa: F401
+                                   apply_updates, make_optimizer)
+from repro.core.packing import PackedLayout, build_layout  # noqa: F401
 from repro.core.sgd import sgd  # noqa: F401
 from repro.core.lars import lars  # noqa: F401
 from repro.core.lamb import lamb  # noqa: F401
 from repro.core.adamw import adamw  # noqa: F401
-from repro.core import schedules, scaling, trust_ratio, grad_stats  # noqa: F401
+from repro.core import packing, schedules, scaling, trust_ratio, grad_stats  # noqa: F401
 
 OPTIMIZERS = {
     "sgd": sgd,

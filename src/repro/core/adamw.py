@@ -3,56 +3,28 @@
 Not part of the paper's comparison (that is SGD vs LARS) but needed as the
 conventional-optimizer reference point when we drive the assigned
 production architectures (an evaluation the paper explicitly wished for in
-§6 but could not reach with SystemML).
+§6 but could not reach with SystemML). On the shared substrate AdamW is
+literally LAMB with the trust ratio removed (``trust=None``).
 """
 
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.optim_base import (Optimizer, OptState, Pytree, Schedule,
-                                   as_schedule, zeros_like_tree)
-
-tree_map = jax.tree_util.tree_map
+from repro.core.optim_base import (LayerwiseRule, Optimizer, Schedule,
+                                   adam_moments, make_optimizer)
 
 
 def adamw(learning_rate: float | Schedule = 1e-3, *, b1: float = 0.9,
           b2: float = 0.999, eps: float = 1e-8,
           weight_decay: float = 0.0) -> Optimizer:
-    lr_fn = as_schedule(learning_rate)
+    prepare, direction = adam_moments(b1, b2, eps, weight_decay)
 
-    def init(params: Pytree) -> OptState:
-        return OptState(step=jnp.zeros((), jnp.int32),
-                        slots={"mu": zeros_like_tree(params),
-                               "nu": zeros_like_tree(params)})
+    def apply(ctx, w, g, u, local_lr, slots):
+        return w - local_lr * u, slots
 
-    def update(grads: Pytree, state: OptState, params: Pytree,
-               stacked: Optional[Pytree] = None) -> tuple[Pytree, OptState]:
-        del stacked
-        lr = lr_fn(state.step).astype(jnp.float32)
-        t = (state.step + 1).astype(jnp.float32)
-        c1 = 1.0 - jnp.power(b1, t)
-        c2 = 1.0 - jnp.power(b2, t)
-
-        new_mu = tree_map(
-            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
-            state.slots["mu"], grads)
-        new_nu = tree_map(
-            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
-            state.slots["nu"], grads)
-
-        def leaf(w, m, v):
-            wf = w.astype(jnp.float32)
-            u = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * wf
-            return (wf - lr * u).astype(w.dtype)
-
-        new_params = tree_map(leaf, params, new_mu, new_nu)
-        return new_params, OptState(step=state.step + 1,
-                                    slots={"mu": new_mu, "nu": new_nu})
-
-    return Optimizer(name="adamw", init=init, update=update,
-                     hyperparams=dict(learning_rate=learning_rate, b1=b1,
-                                      b2=b2, weight_decay=weight_decay))
+    rule = LayerwiseRule(name="adamw", slots=("mu", "nu"),
+                         direction=direction, apply=apply, trust=None,
+                         prepare=prepare)
+    return make_optimizer(rule, learning_rate,
+                          hyperparams=dict(learning_rate=learning_rate,
+                                           b1=b1, b2=b2,
+                                           weight_decay=weight_decay))

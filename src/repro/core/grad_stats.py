@@ -14,20 +14,9 @@ import jax.numpy as jnp
 
 from repro.core import trust_ratio as tr
 from repro.core.optim_base import normalize_stacked
+from repro.treepath import path_str
 
 Pytree = Any
-
-
-def _path_str(path) -> str:
-    parts = []
-    for p in path:
-        if hasattr(p, "key"):
-            parts.append(str(p.key))
-        elif hasattr(p, "idx"):
-            parts.append(str(p.idx))
-        else:
-            parts.append(str(p))
-    return "/".join(parts)
 
 
 def layer_stats(params: Pytree, grads: Pytree, *,
@@ -45,7 +34,7 @@ def layer_stats(params: Pytree, grads: Pytree, *,
         w_norm, g_norm = tr.layer_norms(w, g, s)
         trust = tr.lars_trust_ratio(w_norm, g_norm, eta=eta,
                                     weight_decay=weight_decay)
-        out[_path_str(path)] = {
+        out[path_str(path)] = {
             "w_norm": w_norm,
             "g_norm": g_norm,
             "ratio_wg": w_norm / (g_norm + 1e-12),

@@ -9,71 +9,38 @@ the beyond-paper extension of the same layer-wise trust-ratio family:
     u  = m_hat / (sqrt(v_hat) + eps) + wd * w
     w <- w - lr * [phi(||w||)/||u||] * u
 
-with the same stacked-leaf per-layer semantics as LARS.
+with the same stacked-leaf per-layer semantics as LARS — both are
+:class:`~repro.core.optim_base.LayerwiseRule` instances differing only in
+the direction and ratio functions, exactly the family relationship the
+LARS/LAMB papers define.
 """
 
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.optim_base import (Optimizer, OptState, Pytree, Schedule,
-                                   as_schedule, normalize_stacked,
-                                   zeros_like_tree)
+from repro.core.optim_base import (LayerwiseRule, Optimizer, Schedule,
+                                   adam_moments, make_optimizer)
 from repro.core import trust_ratio as tr
-
-tree_map = jax.tree_util.tree_map
 
 
 def lamb(learning_rate: float | Schedule = 1e-3, *, b1: float = 0.9,
          b2: float = 0.999, eps: float = 1e-6, weight_decay: float = 1e-4,
          trust_clip_max: float = 10.0,
          skip_adaptation_1d: bool = True) -> Optimizer:
-    lr_fn = as_schedule(learning_rate)
+    prepare, direction = adam_moments(b1, b2, eps, weight_decay)
 
-    def init(params: Pytree) -> OptState:
-        return OptState(step=jnp.zeros((), jnp.int32),
-                        slots={"mu": zeros_like_tree(params),
-                               "nu": zeros_like_tree(params)})
+    def trust(ctx, w_norm, u_norm):
+        return tr.lamb_trust_ratio(w_norm, u_norm, clip_max=trust_clip_max)
 
-    def update(grads: Pytree, state: OptState, params: Pytree,
-               stacked: Optional[Pytree] = None) -> tuple[Pytree, OptState]:
-        lr = lr_fn(state.step).astype(jnp.float32)
-        t = (state.step + 1).astype(jnp.float32)
-        c1 = 1.0 - jnp.power(b1, t)
-        c2 = 1.0 - jnp.power(b2, t)
-        stacked_full = normalize_stacked(params, stacked)
+    def apply(ctx, w, g, u, local_lr, slots):
+        return w - local_lr * u, slots
 
-        new_mu = tree_map(
-            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
-            state.slots["mu"], grads)
-        new_nu = tree_map(
-            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
-            state.slots["nu"], grads)
-
-        def leaf(w, m, v, s: bool):
-            wf = w.astype(jnp.float32)
-            u = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * wf
-            adapt = not (skip_adaptation_1d and tr.effective_rank(w, s) <= 1)
-            if adapt:
-                axes = tr.reduction_axes(w, s)
-                w_norm = jnp.sqrt(jnp.sum(jnp.square(wf), axis=axes))
-                u_norm = jnp.sqrt(jnp.sum(jnp.square(u), axis=axes))
-                ratio = tr.lamb_trust_ratio(w_norm, u_norm,
-                                            clip_max=trust_clip_max)
-                scale = tr.broadcast_ratio(ratio, wf, s)
-            else:
-                scale = 1.0
-            return (wf - lr * scale * u).astype(w.dtype)
-
-        new_params = tree_map(leaf, params, new_mu, new_nu, stacked_full)
-        return new_params, OptState(step=state.step + 1,
-                                    slots={"mu": new_mu, "nu": new_nu})
-
-    return Optimizer(name="lamb", init=init, update=update,
-                     hyperparams=dict(learning_rate=learning_rate, b1=b1,
-                                      b2=b2, weight_decay=weight_decay,
-                                      trust_clip_max=trust_clip_max,
-                                      skip_adaptation_1d=skip_adaptation_1d))
+    rule = LayerwiseRule(name="lamb", slots=("mu", "nu"),
+                         direction=direction, apply=apply, trust=trust,
+                         prepare=prepare,
+                         skip_adaptation_1d=skip_adaptation_1d)
+    return make_optimizer(rule, learning_rate,
+                          hyperparams=dict(learning_rate=learning_rate,
+                                           b1=b1, b2=b2,
+                                           weight_decay=weight_decay,
+                                           trust_clip_max=trust_clip_max,
+                                           skip_adaptation_1d=skip_adaptation_1d))

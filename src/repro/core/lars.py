@@ -10,37 +10,30 @@ where gamma_t is the (scheduled) global learning rate, eta the trust
 coefficient, beta the weight decay and mu the momentum. This matches
 You et al. (ICPP'18) "momentum LARS", which the paper adopts.
 
-Layer-wise semantics under layer-scan
--------------------------------------
-Production models in this repo stack per-layer weights on a leading axis
-and `lax.scan` over them. A parameter leaf marked ``stacked=True`` gets an
-*independent trust ratio per leading index* — this is what keeps LARS
-faithful to "one local LR per layer" (paper §3.2) when the layer loop has
-been traded for a scan.
+Expressed as a :class:`~repro.core.optim_base.LayerwiseRule`: the trust
+norm operand is the raw gradient, the ratio is Eq. 3, and the apply folds
+the local LR *inside* the momentum update. The shared substrate supplies
+both engines (per-leaf reference tree and flat-packed superbuffer);
+layer-wise semantics under layer-scan (``stacked`` leaves -> one trust
+ratio per leading index) come from the substrate, not from this file.
 
 Fused TPU path
 --------------
-``use_pallas=True`` routes the two memory-bound phases through the Pallas
-kernels in :mod:`repro.kernels` (joint ||w||,||g|| pass; fused
-momentum+decay+apply pass). Semantics are identical to the jnp path — the
-kernels are validated leaf-by-leaf against it in tests. The jnp path is the
-default and is what runs under `pjit` with sharded leaves (XLA inserts the
-cross-shard reductions for the norms).
+``use_pallas=True`` (packed layout) routes the two memory-bound phases
+through the Pallas megakernels in :mod:`repro.kernels` — ONE joint
+||w||,||g|| pass and ONE fused momentum+decay+apply pass over the whole
+superbuffer: exactly 2 kernel launches per step regardless of leaf
+count. Semantics are identical to the jnp paths — validated leaf-by-leaf
+in tests. The per-leaf jnp tree path remains the default and is what
+runs under `pjit` with sharded leaves (XLA inserts the cross-shard
+reductions for the norms).
 """
 
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.optim_base import (Optimizer, OptState, Pytree, Schedule,
-                                   as_schedule, normalize_stacked,
-                                   zeros_like_tree)
+from repro.core.optim_base import (LayerwiseRule, Optimizer, Schedule,
+                                   make_optimizer)
 from repro.core import trust_ratio as tr
-
-tree_map = jax.tree_util.tree_map
 
 
 def lars(learning_rate: float | Schedule = 0.01, *, momentum: float = 0.9,
@@ -48,62 +41,42 @@ def lars(learning_rate: float | Schedule = 0.01, *, momentum: float = 0.9,
          skip_adaptation_1d: bool = True, eps: float = 1e-9,
          use_pallas: bool = False) -> Optimizer:
     """Build the LARS optimizer (paper defaults from Table 1)."""
-    lr_fn = as_schedule(learning_rate)
 
-    def init(params: Pytree) -> OptState:
-        return OptState(step=jnp.zeros((), jnp.int32),
-                        slots={"momentum": zeros_like_tree(params)})
+    def direction(ctx, g, w, slots):
+        return g, slots          # Eq. 3 norms the raw gradient
 
-    def _leaf_update(g, m, w, stacked: bool, lr):
-        """One parameter leaf: returns (w_new, m_new)."""
-        gf = g.astype(jnp.float32)
-        wf = w.astype(jnp.float32)
+    def trust(ctx, w_norm, g_norm):
+        return tr.lars_trust_ratio(w_norm, g_norm, eta=trust_coefficient,
+                                   weight_decay=weight_decay, eps=eps)
 
-        adapt = not (skip_adaptation_1d
-                     and tr.effective_rank(w, stacked) <= 1)
-        if adapt:
-            if use_pallas:
-                from repro.kernels import ops as kops
-                w_norm, g_norm = kops.lars_norms(wf, gf, stacked=stacked)
-            else:
-                w_norm, g_norm = tr.layer_norms(wf, gf, stacked)
-            ratio = tr.lars_trust_ratio(w_norm, g_norm,
-                                        eta=trust_coefficient,
-                                        weight_decay=weight_decay, eps=eps)
-            local_lr = lr * tr.broadcast_ratio(ratio, wf, stacked)
-        else:
-            local_lr = lr
+    def apply(ctx, w, g, u, local_lr, slots):
+        m_new = momentum * slots["momentum"] + local_lr * (
+            g + weight_decay * w)
+        return w - m_new, {"momentum": m_new}
 
-        if use_pallas and adapt:
-            from repro.kernels import ops as kops
-            w_new, m_new = kops.lars_apply(
-                wf, gf, m, local_lr=local_lr, momentum=momentum,
-                weight_decay=weight_decay)
-        else:
-            g_eff = gf + weight_decay * wf
-            m_new = momentum * m + local_lr * g_eff
-            w_new = wf - m_new
-        return w_new.astype(w.dtype), m_new
+    # Pallas megakernel overrides for the packed engine — the engine
+    # keeps the trust/adapt-mask logic, these are just the two fused
+    # memory-bound passes (one launch each).
+    def packed_norms(layout, wbuf, ubuf):
+        from repro.kernels import ops as kops
+        return kops.lars_norms_packed(layout, wbuf, ubuf)
 
-    def update(grads: Pytree, state: OptState, params: Pytree,
-               stacked: Optional[Pytree] = None) -> tuple[Pytree, OptState]:
-        lr = lr_fn(state.step).astype(jnp.float32)
-        stacked_full = normalize_stacked(params, stacked)
+    def packed_apply(ctx, layout, wbuf, gbuf, ubuf, lr_slices, slots):
+        from repro.kernels import ops as kops
+        wbuf2, mbuf2 = kops.lars_apply_packed(
+            layout, wbuf, gbuf, slots["momentum"], lr_slices,
+            momentum=momentum, weight_decay=weight_decay)
+        return wbuf2, {"momentum": mbuf2}
 
-        pairs = tree_map(
-            lambda g, m, w, s: _leaf_update(g, m, w, s, lr),
-            grads, state.slots["momentum"], params, stacked_full)
-        new_params = tree_map(lambda t: t[0], pairs,
-                              is_leaf=lambda t: isinstance(t, tuple))
-        new_m = tree_map(lambda t: t[1], pairs,
-                         is_leaf=lambda t: isinstance(t, tuple))
-        return new_params, OptState(step=state.step + 1,
-                                    slots={"momentum": new_m})
-
-    return Optimizer(name="lars", init=init, update=update,
-                     hyperparams=dict(learning_rate=learning_rate,
-                                      momentum=momentum,
-                                      weight_decay=weight_decay,
-                                      trust_coefficient=trust_coefficient,
-                                      skip_adaptation_1d=skip_adaptation_1d,
-                                      use_pallas=use_pallas))
+    rule = LayerwiseRule(name="lars", slots=("momentum",),
+                         direction=direction, apply=apply, trust=trust,
+                         skip_adaptation_1d=skip_adaptation_1d,
+                         packed_norms=packed_norms,
+                         packed_apply=packed_apply)
+    return make_optimizer(rule, learning_rate, use_pallas=use_pallas,
+                          hyperparams=dict(learning_rate=learning_rate,
+                                           momentum=momentum,
+                                           weight_decay=weight_decay,
+                                           trust_coefficient=trust_coefficient,
+                                           skip_adaptation_1d=skip_adaptation_1d,
+                                           use_pallas=use_pallas))

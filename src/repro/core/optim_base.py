@@ -1,38 +1,110 @@
-"""Optimizer protocol shared by SGD / LARS / LAMB / AdamW.
+"""Shared layer-wise optimizer substrate for SGD / LARS / LAMB / AdamW.
 
 Design notes
 ------------
 * Pure-JAX, optax-free (the container ships no optax, and the point of the
   repo is the optimizer *as the paper's contribution*).
-* ``Optimizer.init(params) -> OptState``; ``Optimizer.update(grads, state,
-  params, stacked=None) -> (new_params, new_state)``. The update is a single
-  jit-able function of pytrees; the step counter lives in the state so LR
-  schedules are pure.
-* ``stacked``: a pytree of bools mirroring ``params`` (or a prefix thereof).
-  ``True`` marks a parameter whose leading axis stacks layers for
-  ``lax.scan`` (shape ``(L, ...)``). Layer-wise optimizers (LARS/LAMB) must
-  compute their trust ratios *per leading index* for such tensors, otherwise
-  the "layer-wise" semantics of the paper silently degrade to
-  "whole-stack-wise". Non-layer-wise optimizers ignore it.
+* ``Optimizer.init(params, stacked=None) -> OptState``;
+  ``Optimizer.update(grads, state, params, stacked=None) ->
+  (new_params, new_state)``. The update is a single jit-able function of
+  pytrees; the step counter lives in the state so LR schedules are pure.
+* ``stacked``: a pytree of bools mirroring ``params``. ``True`` marks a
+  parameter whose leading axis stacks layers for ``lax.scan`` (shape
+  ``(L, ...)``). Layer-wise optimizers (LARS/LAMB) compute their trust
+  ratios *per leading index* for such tensors, otherwise the "layer-wise"
+  semantics of the paper silently degrade to "whole-stack-wise".
+
+The LayerwiseRule abstraction
+-----------------------------
+You et al.'s LARS (1708.03888) and LAMB (1904.00962) are the *same*
+trust-ratio family differing only in the per-layer direction; SGD and
+AdamW are the degenerate members with trust ratio 1. A
+:class:`LayerwiseRule` captures exactly that factorization:
+
+* ``direction(ctx, g, w, slots)`` — elementwise: the tensor whose norm
+  feeds the trust ratio, plus any slot updates that precede it;
+* ``trust(ctx, w_norm, u_norm)`` — the per-layer local-LR ratio
+  (``None`` for non-layer-wise rules);
+* ``apply(ctx, w, g, u, local_lr, slots)`` — elementwise: fold the local
+  LR into the weight (and remaining slot) update.
+
+Because every piece is elementwise or a per-layer scalar, ONE rule runs
+on two interchangeable engines:
+
+* the **tree engine** (``init(params)`` with no marker): slots mirror the
+  param pytree leaf-for-leaf; per-leaf norms. This is the jnp reference
+  path and the pjit/sharded fallback — XLA inserts the cross-shard
+  reductions for the norms.
+* the **flat-packed engine** (``init(params, stacked=marker)``): the whole
+  pytree lives in one ``(rows, lane)`` superbuffer
+  (:mod:`repro.core.packing`); slots stay packed across steps; norms are
+  one segment-reduced pass; the LARS Pallas fast path issues exactly two
+  kernel launches per step regardless of leaf count.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+import functools
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
+from repro.core import trust_ratio as tr
+
 Pytree = Any
 Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> learning rate
 
+tree_map = jax.tree_util.tree_map
 
-class OptState(NamedTuple):
-    """Generic optimizer state: step counter + per-optimizer slot pytrees."""
 
-    step: jnp.ndarray          # scalar int32
-    slots: dict[str, Pytree]   # e.g. {"momentum": ..., "nu": ...}
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["step", "slots"], meta_fields=["layout"])
+@dataclasses.dataclass
+class OptState:
+    """Generic optimizer state: step counter + per-rule slot buffers.
+
+    Tree layout (``layout is None``): each slot is a pytree mirroring
+    params. Packed layout: each slot is a ``(rows, lane)`` f32 superbuffer
+    and ``layout`` carries the static :class:`~repro.core.packing.
+    PackedLayout` (pytree *metadata*, not a traced leaf)."""
+
+    step: jnp.ndarray                      # scalar int32
+    slots: dict[str, Pytree]               # e.g. {"momentum": ...}
+    layout: Optional[packing.PackedLayout] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerwiseRule:
+    """One optimizer of the layer-wise trust-ratio family.
+
+    All callables are elementwise over arbitrarily-shaped f32 arrays (a
+    single leaf on the tree engine, the whole superbuffer on the packed
+    engine); ``trust`` maps per-layer norm scalars/vectors to ratios.
+    """
+
+    name: str
+    slots: tuple[str, ...]
+    # (ctx, g, w, slots) -> (u, slots'): the trust-ratio norm operand.
+    direction: Callable[..., tuple[jnp.ndarray, dict]]
+    # (ctx, w, g, u, local_lr, slots) -> (w_new, slots')
+    apply: Callable[..., tuple[jnp.ndarray, dict]]
+    # (ctx, w_norm, u_norm) -> per-layer ratio; None = always 1.
+    trust: Optional[Callable[..., jnp.ndarray]] = None
+    # step (int32 scalar) -> dict of step-dependent scalars.
+    prepare: Optional[Callable[[jnp.ndarray], dict]] = None
+    # rank<=1 slices (biases, norm scales) keep trust ratio 1.
+    skip_adaptation_1d: bool = True
+    # Optional Pallas megakernel overrides for the packed engine (used
+    # when the optimizer is built with use_pallas=True). The engine owns
+    # trust/adapt-mask logic either way; these swap only the two
+    # memory-bound passes.
+    # (layout, wbuf, ubuf) -> (w_norm, u_norm) per slice:
+    packed_norms: Optional[Callable[..., tuple]] = None
+    # (ctx, layout, wbuf, gbuf, ubuf, lr_slices, slots) -> (wbuf', slots'):
+    packed_apply: Optional[Callable[..., tuple[jnp.ndarray, dict]]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,7 +112,7 @@ class Optimizer:
     """A named pair of pure functions (init, update)."""
 
     name: str
-    init: Callable[[Pytree], OptState]
+    init: Callable[..., OptState]
     update: Callable[..., tuple[Pytree, OptState]]
     # Hyperparameters for introspection / experiment logging.
     hyperparams: dict[str, Any] = dataclasses.field(default_factory=dict)
@@ -49,6 +121,142 @@ class Optimizer:
         hp = ", ".join(f"{k}={v}" for k, v in self.hyperparams.items()
                        if not callable(v))
         return f"Optimizer({self.name}, {hp})"
+
+
+# ------------------------------------------------------------------ engines
+
+def _tree_update(rule: LayerwiseRule, lr, ctx: dict, grads: Pytree,
+                 slots: dict[str, Pytree], params: Pytree,
+                 stacked_full: Pytree) -> tuple[Pytree, dict]:
+    """Per-leaf reference engine (pjit/sharded fallback)."""
+
+    def leaf(g, w, s: bool, *slot_leaves):
+        sl = dict(zip(rule.slots, slot_leaves))
+        gf = g.astype(jnp.float32)
+        wf = w.astype(jnp.float32)
+        u, sl = rule.direction(ctx, gf, wf, sl)
+        local_lr = lr
+        if rule.trust is not None and not (
+                rule.skip_adaptation_1d and tr.effective_rank(w, s) <= 1):
+            w_norm, u_norm = tr.layer_norms(wf, u, s)
+            ratio = rule.trust(ctx, w_norm, u_norm)
+            local_lr = lr * tr.broadcast_ratio(ratio, wf, s)
+        w_new, sl = rule.apply(ctx, wf, gf, u, local_lr, sl)
+        return (w_new.astype(w.dtype),) + tuple(sl[k] for k in rule.slots)
+
+    packs = tree_map(leaf, grads, params, stacked_full,
+                     *[slots[k] for k in rule.slots])
+    is_tup = lambda t: isinstance(t, tuple)  # noqa: E731
+    new_params = tree_map(lambda t: t[0], packs, is_leaf=is_tup)
+    new_slots = {k: tree_map(lambda t, i=i + 1: t[i], packs, is_leaf=is_tup)
+                 for i, k in enumerate(rule.slots)}
+    return new_params, new_slots
+
+
+def _packed_update(rule: LayerwiseRule, layout: packing.PackedLayout, lr,
+                   ctx: dict, grads: Pytree, slots: dict, params: Pytree,
+                   use_pallas: bool) -> tuple[Pytree, dict]:
+    """Flat-packed engine: whole-pytree buffers, per-slice scalars.
+
+    ``use_pallas`` swaps the norms/apply passes for the rule's
+    megakernels; the trust-ratio and adaptation-mask logic is computed
+    here either way, so the two paths cannot drift.
+    """
+    wbuf = packing.pack(layout, params)
+    gbuf = packing.pack(layout, grads)
+    u, slots = rule.direction(ctx, gbuf, wbuf, dict(slots))
+    ratio = None
+    if rule.trust is not None:
+        norms_fn = (rule.packed_norms
+                    if use_pallas and rule.packed_norms is not None
+                    else packing.slice_norms)
+        w_norm, u_norm = norms_fn(layout, wbuf, u)
+        ratio = rule.trust(ctx, w_norm, u_norm)
+        if rule.skip_adaptation_1d:
+            ratio = jnp.where(packing.adapt_mask(layout), ratio, 1.0)
+    if use_pallas and rule.packed_apply is not None:
+        ones = jnp.ones((layout.num_slices,), jnp.float32)
+        lr_slices = lr * (ratio if ratio is not None else ones)
+        wbuf2, new_slots = rule.packed_apply(ctx, layout, wbuf, gbuf, u,
+                                             lr_slices, slots)
+    else:
+        local_lr = lr if ratio is None \
+            else lr * packing.rows_expand(layout, ratio)
+        wbuf2, new_slots = rule.apply(ctx, wbuf, gbuf, u, local_lr, slots)
+    new_params = packing.unpack(layout, wbuf2)
+    return new_params, new_slots
+
+
+def make_optimizer(rule: LayerwiseRule, learning_rate: float | Schedule, *,
+                   use_pallas: bool = False,
+                   hyperparams: Optional[dict] = None) -> Optimizer:
+    """Build an :class:`Optimizer` from a rule (the ONLY update body —
+    individual optimizers supply ~20-line rules, not engines)."""
+    lr_fn = as_schedule(learning_rate)
+
+    def init(params: Pytree, stacked: Optional[Pytree] = None) -> OptState:
+        step = jnp.zeros((), jnp.int32)
+        if stacked is None:
+            return OptState(step=step, slots={
+                k: zeros_like_tree(params) for k in rule.slots})
+        layout = packing.build_layout(
+            params, normalize_stacked(params, stacked))
+        zeros = functools.partial(jnp.zeros, layout.buffer_shape,
+                                  jnp.float32)
+        return OptState(step=step,
+                        slots={k: zeros() for k in rule.slots},
+                        layout=layout)
+
+    def update(grads: Pytree, state: OptState, params: Pytree,
+               stacked: Optional[Pytree] = None
+               ) -> tuple[Pytree, OptState]:
+        lr = lr_fn(state.step).astype(jnp.float32)
+        ctx = rule.prepare(state.step) if rule.prepare is not None else {}
+        if state.layout is not None:
+            if stacked is not None:
+                packing.check_marker(state.layout, params, stacked)
+            new_params, new_slots = _packed_update(
+                rule, state.layout, lr, ctx, grads, state.slots, params,
+                use_pallas)
+        else:
+            if use_pallas:
+                raise ValueError(
+                    f"{rule.name}(use_pallas=True) requires the flat-"
+                    "packed layout: build the state with init(params, "
+                    "stacked=marker). Tree-layout states (init(params)) "
+                    "run the per-leaf jnp reference path only.")
+            stacked_full = normalize_stacked(params, stacked)
+            new_params, new_slots = _tree_update(
+                rule, lr, ctx, grads, state.slots, params, stacked_full)
+        return new_params, OptState(step=state.step + 1, slots=new_slots,
+                                    layout=state.layout)
+
+    return Optimizer(name=rule.name, init=init, update=update,
+                     hyperparams=dict(hyperparams or {}))
+
+
+# ------------------------------------------------------------------ helpers
+
+def adam_moments(b1: float, b2: float, eps: float, weight_decay: float
+                 ) -> tuple[Callable, Callable]:
+    """Shared (prepare, direction) for the Adam family.
+
+    AdamW and LAMB are the same bias-corrected moment update; they differ
+    only in the trust ratio applied afterwards (None vs phi(||w||)/||u||).
+    """
+
+    def prepare(step):
+        t = (step + 1).astype(jnp.float32)
+        return {"c1": 1.0 - jnp.power(b1, t), "c2": 1.0 - jnp.power(b2, t)}
+
+    def direction(ctx, g, w, slots):
+        mu = b1 * slots["mu"] + (1 - b1) * g
+        nu = b2 * slots["nu"] + (1 - b2) * jnp.square(g)
+        u = (mu / ctx["c1"]) / (jnp.sqrt(nu / ctx["c2"]) + eps) \
+            + weight_decay * w
+        return u, {"mu": mu, "nu": nu}
+
+    return prepare, direction
 
 
 def as_schedule(lr: float | Schedule) -> Schedule:

@@ -1,0 +1,294 @@
+"""Flat-packed layer-wise substrate: one superbuffer for the whole pytree.
+
+The paper's §6 bottleneck analysis is per-layer optimizer overhead —
+SystemML re-walks the runtime once per layer per step. Our earlier JAX
+port reproduced that shape of cost: every optimizer re-packed each
+parameter leaf into the kernels' layout and issued kernel launches *per
+leaf*. This module removes the per-leaf axis entirely:
+
+* ``build_layout(params, stacked)`` computes a STATIC :class:`PackedLayout`
+  from the pytree structure + stacked marker: a per-leaf segment table
+  (row offset, layer count, rows per layer slice, original shape/dtype)
+  describing how every leaf maps into one ``(total_rows, lane)`` f32
+  superbuffer. "Layer slice" follows the paper's layer-wise semantics:
+  an unstacked leaf is one slice; a leaf marked ``stacked`` (shape
+  ``(L, ...)``, scanned over layers) contributes ``L`` independent slices
+  so each layer keeps its own trust ratio.
+* ``pack`` / ``unpack`` move a pytree into / out of the superbuffer
+  (flatten, zero-pad each slice to a whole number of ``block_rows`` row
+  blocks, concatenate along rows). Zero padding is norm-neutral.
+* ``slice_sumsq`` / ``rows_expand`` give per-slice reductions and
+  per-slice-scalar broadcasts over the superbuffer via a static
+  row -> slice index map (a ``segment_sum`` / gather — no per-leaf loop).
+
+Optimizer slot buffers (momentum, second moment) are stored packed inside
+``OptState`` between steps, so only ``params`` and ``grads`` are packed
+per step — pure reshape/concat data movement that XLA fuses, with no
+per-leaf kernel launches.
+
+Layout diagram (lane = 512 columns, block_rows = 8):
+
+    rows ->  +----------------------------+  slice ids
+             | embed        (pad to blk)  |  0
+             +----------------------------+
+             | layers/wq  layer 0         |  1
+             | layers/wq  layer 1         |  2
+             |   ...      (L slices)      |  ...
+             +----------------------------+
+             | layers/scale layer 0..L    |  (1 row each, adapt=False)
+             +----------------------------+
+             | unembed                    |  L_total - 1
+             +----------------------------+
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.treepath import path_str
+
+Pytree = Any
+
+LANE = 512        # superbuffer column count (multiple of the TPU lane 128)
+BLOCK_ROWS = 8    # sublane rows per kernel block; slices are block-aligned
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """Static placement of one parameter leaf in the superbuffer."""
+
+    name: str                   # "/"-joined key path (debug / telemetry)
+    shape: tuple[int, ...]      # original leaf shape
+    dtype: str                  # original leaf dtype name
+    stacked: bool               # leading axis is a layer stack
+    layers: int                 # number of layer slices (1 if unstacked)
+    rows: int                   # padded rows per slice (multiple of BLOCK_ROWS)
+    n: int                      # true elements per slice (before padding)
+    row_offset: int             # first superbuffer row of slice 0
+    slice_offset: int           # id of slice 0 in per-slice vectors
+    adapt: bool                 # slice rank > 1 -> trust ratio applies
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLayout:
+    """Static description of a whole-pytree superbuffer packing."""
+
+    segments: tuple[Segment, ...]
+    treedef: Any                # pytree structure (hashable)
+    lane: int
+    block_rows: int
+    total_rows: int
+    num_slices: int
+
+    @property
+    def buffer_shape(self) -> tuple[int, int]:
+        return (self.total_rows, self.lane)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.total_rows // self.block_rows
+
+    def stacked_flags(self) -> tuple[bool, ...]:
+        return tuple(s.stacked for s in self.segments)
+
+
+def _slice_rank(shape: tuple[int, ...], stacked: bool) -> int:
+    return len(shape) - (1 if stacked else 0)
+
+
+@functools.lru_cache(maxsize=64)
+def _build_layout_static(treedef, names: tuple[str, ...],
+                         shapes: tuple[tuple[int, ...], ...],
+                         dtypes: tuple[str, ...],
+                         stacked: tuple[bool, ...],
+                         lane: int, block_rows: int) -> PackedLayout:
+    segments = []
+    row_offset = 0
+    slice_offset = 0
+    per_block = lane * block_rows
+    for name, shape, dtype, stk in zip(names, shapes, dtypes, stacked):
+        size = int(np.prod(shape)) if shape else 1
+        if stk and not shape:
+            raise ValueError(f"scalar leaf {name!r} cannot be stacked")
+        layers = shape[0] if stk else 1
+        if layers == 0:
+            raise ValueError(f"empty layer stack for leaf {name!r}")
+        n = size // layers
+        rows = max(1, math.ceil(n / per_block)) * block_rows
+        segments.append(Segment(
+            name=name, shape=shape, dtype=dtype, stacked=stk,
+            layers=layers, rows=rows, n=n, row_offset=row_offset,
+            slice_offset=slice_offset,
+            adapt=_slice_rank(shape, stk) > 1))
+        row_offset += layers * rows
+        slice_offset += layers
+    return PackedLayout(segments=tuple(segments), treedef=treedef,
+                        lane=lane, block_rows=block_rows,
+                        total_rows=row_offset, num_slices=slice_offset)
+
+
+def build_layout(params: Pytree, stacked: Pytree, *, lane: int = LANE,
+                 block_rows: int = BLOCK_ROWS) -> PackedLayout:
+    """Static layout from a param pytree (arrays or ShapeDtypeStructs)
+    and a full bool pytree marking (L, ...) layer-stacked leaves."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    if not leaves:
+        raise ValueError("cannot build a packed layout for an empty pytree")
+    stk_leaves = treedef.flatten_up_to(stacked)
+    names = tuple(path_str(path) for path, _ in leaves)
+    shapes = tuple(tuple(leaf.shape) for _, leaf in leaves)
+    dtypes = tuple(jnp.dtype(leaf.dtype).name for _, leaf in leaves)
+    flags = tuple(bool(s) for s in stk_leaves)
+    return _build_layout_static(treedef, names, shapes, dtypes, flags,
+                                lane, block_rows)
+
+
+# ------------------------------------------------------- static index maps
+
+@functools.lru_cache(maxsize=64)
+def _row_slice_ids(layout: PackedLayout) -> np.ndarray:
+    """(total_rows,) int32: owning slice id of every superbuffer row."""
+    ids = np.empty(layout.total_rows, np.int32)
+    for seg in layout.segments:
+        reps = np.repeat(
+            np.arange(seg.slice_offset, seg.slice_offset + seg.layers,
+                      dtype=np.int32), seg.rows)
+        ids[seg.row_offset:seg.row_offset + seg.layers * seg.rows] = reps
+    return ids
+
+
+@functools.lru_cache(maxsize=64)
+def _block_slice_ids(layout: PackedLayout) -> np.ndarray:
+    """(num_blocks,) int32: owning slice id of every block_rows row block."""
+    return _row_slice_ids(layout)[::layout.block_rows].copy()
+
+
+@functools.lru_cache(maxsize=64)
+def _adapt_mask(layout: PackedLayout) -> np.ndarray:
+    """(num_slices,) bool: True where the trust ratio applies (rank > 1)."""
+    mask = np.empty(layout.num_slices, bool)
+    for seg in layout.segments:
+        mask[seg.slice_offset:seg.slice_offset + seg.layers] = seg.adapt
+    return mask
+
+
+def row_slice_ids(layout: PackedLayout) -> jnp.ndarray:
+    return jnp.asarray(_row_slice_ids(layout))
+
+
+def block_slice_ids(layout: PackedLayout) -> jnp.ndarray:
+    return jnp.asarray(_block_slice_ids(layout))
+
+
+def adapt_mask(layout: PackedLayout) -> jnp.ndarray:
+    return jnp.asarray(_adapt_mask(layout))
+
+
+# ---------------------------------------------------------- pack / unpack
+
+def _replicate_in_mesh(x: jnp.ndarray) -> jnp.ndarray:
+    """Pin ``x`` to fully-replicated when tracing under an ambient mesh.
+
+    The superbuffer mixes every leaf's shards along one row axis; left to
+    sharding propagation, GSPMD resolves the pad/reshape/concat of
+    FSDP-sharded leaves inconsistently across consumers (observed: the
+    per-slice norm reduction sees each element data-axis-times — a
+    silently wrong trust ratio under pjit). The packed substrate's
+    contract is a replicated optimizer region, so state it explicitly;
+    GSPMD then inserts the all-gathers exactly once, at pack time.
+
+    Limitation (jax 0.4.x): the mesh is only discoverable from the
+    legacy ``with mesh:`` context — tracing a packed update under jit
+    with ``in_shardings=NamedSharding(...)`` but NO ambient mesh skips
+    the constraint and can hit the mis-partitioning above. Sharded runs
+    must either trace inside ``with mesh:`` (what this repo's pjit entry
+    points do) or use the per-leaf tree layout (``opt.init(params)``),
+    which shards cleanly leaf-for-leaf.
+    """
+    from jax.interpreters import pxla
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*([None] * x.ndim))))
+
+
+def pack(layout: PackedLayout, tree: Pytree) -> jnp.ndarray:
+    """Pytree -> (total_rows, lane) f32 superbuffer (zero padded)."""
+    leaves = layout.treedef.flatten_up_to(tree)
+    parts = []
+    for seg, leaf in zip(layout.segments, leaves):
+        flat = jnp.asarray(leaf).astype(jnp.float32).reshape(seg.layers, -1)
+        padded = seg.rows * layout.lane
+        if padded != seg.n:
+            flat = jnp.pad(flat, ((0, 0), (0, padded - seg.n)))
+        parts.append(flat.reshape(seg.layers * seg.rows, layout.lane))
+    return _replicate_in_mesh(jnp.concatenate(parts, axis=0))
+
+
+def unpack(layout: PackedLayout, buf: jnp.ndarray,
+           dtype: Optional[Any] = None) -> Pytree:
+    """(total_rows, lane) superbuffer -> pytree.
+
+    Leaves are cast to their original dtypes, or to ``dtype`` when given
+    (slot buffers are unpacked as f32 regardless of the param dtype).
+    """
+    assert buf.shape == layout.buffer_shape, (buf.shape, layout.buffer_shape)
+    leaves = []
+    for seg in layout.segments:
+        rows = seg.layers * seg.rows
+        block = jax.lax.slice(buf, (seg.row_offset, 0),
+                              (seg.row_offset + rows, layout.lane))
+        flat = block.reshape(seg.layers, seg.rows * layout.lane)[:, :seg.n]
+        leaves.append(flat.reshape(seg.shape).astype(dtype or seg.dtype))
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+# -------------------------------------------------- per-slice reductions
+
+def slice_sumsq(layout: PackedLayout, buf: jnp.ndarray) -> jnp.ndarray:
+    """(num_slices,) f32: sum of squares per layer slice (one pass)."""
+    row_sums = jnp.sum(jnp.square(buf.astype(jnp.float32)), axis=1)
+    return jax.ops.segment_sum(row_sums, row_slice_ids(layout),
+                               num_segments=layout.num_slices,
+                               indices_are_sorted=True)
+
+
+def slice_norms(layout: PackedLayout, a: jnp.ndarray, b: jnp.ndarray
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Joint per-slice L2 norms of two superbuffers; (num_slices,) each."""
+    return (jnp.sqrt(slice_sumsq(layout, a)),
+            jnp.sqrt(slice_sumsq(layout, b)))
+
+
+def rows_expand(layout: PackedLayout, per_slice: jnp.ndarray) -> jnp.ndarray:
+    """(num_slices,) -> (total_rows, 1): broadcast per-slice scalars so
+    they multiply against the superbuffer."""
+    return per_slice[row_slice_ids(layout)][:, None]
+
+
+def blocks_expand(layout: PackedLayout, per_slice: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """(num_slices,) -> (num_blocks, 1): per-row-block scalars (the apply
+    megakernel reads one scalar per grid step)."""
+    return per_slice[block_slice_ids(layout)][:, None]
+
+
+def check_marker(layout: PackedLayout, params: Pytree,
+                 stacked: Pytree) -> None:
+    """Validate an update-time stacked marker against the init-time layout."""
+    flags = tuple(bool(s) for s in layout.treedef.flatten_up_to(stacked))
+    if flags != layout.stacked_flags():
+        raise ValueError(
+            "stacked marker passed to update() disagrees with the marker "
+            "the packed OptState was built with at init(); rebuild the "
+            "optimizer state with the new marker")

@@ -6,54 +6,33 @@ SystemML `sgd_momentum` update the paper builds on:
 
     m <- mu * m + (g + wd * w)
     w <- w - lr_t * m
+
+Expressed on the shared substrate as the degenerate member of the
+trust-ratio family (``trust=None`` -> local LR == global LR everywhere);
+the same rule runs per-leaf or flat-packed.
 """
 
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.optim_base import (Optimizer, OptState, Pytree, Schedule,
-                                   as_schedule, zeros_like_tree)
-
-tree_map = jax.tree_util.tree_map
+from repro.core.optim_base import (LayerwiseRule, Optimizer, Schedule,
+                                   make_optimizer)
 
 
 def sgd(learning_rate: float | Schedule = 0.01, *, momentum: float = 0.9,
         weight_decay: float = 1e-4, nesterov: bool = False) -> Optimizer:
-    lr_fn = as_schedule(learning_rate)
 
-    def init(params: Pytree) -> OptState:
-        return OptState(step=jnp.zeros((), jnp.int32),
-                        slots={"momentum": zeros_like_tree(params)})
+    def direction(ctx, g, w, slots):
+        return g + weight_decay * w, slots
 
-    def update(grads: Pytree, state: OptState, params: Pytree,
-               stacked: Optional[Pytree] = None) -> tuple[Pytree, OptState]:
-        del stacked  # SGD is not layer-wise
-        lr = lr_fn(state.step).astype(jnp.float32)
+    def apply(ctx, w, g, u, local_lr, slots):
+        m_new = momentum * slots["momentum"] + u
+        step_dir = u + momentum * m_new if nesterov else m_new
+        return w - local_lr * step_dir, {"momentum": m_new}
 
-        def new_momentum(g, m, w):
-            g_eff = g.astype(jnp.float32) + weight_decay * w.astype(jnp.float32)
-            return momentum * m + g_eff
-
-        new_m = tree_map(new_momentum, grads, state.slots["momentum"], params)
-
-        def new_param(w, m, g):
-            if nesterov:
-                g_eff = g.astype(jnp.float32) + weight_decay * w.astype(jnp.float32)
-                step_dir = g_eff + momentum * m
-            else:
-                step_dir = m
-            return (w.astype(jnp.float32) - lr * step_dir).astype(w.dtype)
-
-        new_params = tree_map(new_param, params, new_m, grads)
-        return new_params, OptState(step=state.step + 1,
-                                    slots={"momentum": new_m})
-
-    return Optimizer(name="sgd", init=init, update=update,
-                     hyperparams=dict(learning_rate=learning_rate,
-                                      momentum=momentum,
-                                      weight_decay=weight_decay,
-                                      nesterov=nesterov))
+    rule = LayerwiseRule(name="sgd", slots=("momentum",),
+                         direction=direction, apply=apply, trust=None)
+    return make_optimizer(rule, learning_rate,
+                          hyperparams=dict(learning_rate=learning_rate,
+                                           momentum=momentum,
+                                           weight_decay=weight_decay,
+                                           nesterov=nesterov))

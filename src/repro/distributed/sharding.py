@@ -210,15 +210,24 @@ def serve_param_pspecs(cfg, params_shapes: Pytree,
 def state_pspecs(cfg, state_shapes, mesh: Optional[Mesh] = None) -> Any:
     """TrainState(params, OptState(step, slots)) -> matching spec tree.
 
-    Optimizer slot pytrees mirror params leaf-for-leaf, so they inherit
-    the param specs (momentum is sharded exactly like its weight).
+    Tree-layout opt states: slot pytrees mirror params leaf-for-leaf, so
+    they inherit the param specs (momentum is sharded exactly like its
+    weight). Flat-packed opt states: each slot is one (rows, lane)
+    superbuffer whose rows interleave every leaf's shards, so it is kept
+    replicated (the packed substrate targets single-replica-group steps;
+    FSDP-scale runs init with ``opt.init(params)`` for the tree layout).
     """
     from repro.train.state import TrainState
     from repro.core.optim_base import OptState
     pspecs = param_pspecs(cfg, state_shapes.params, mesh)
-    slot_specs = {k: pspecs for k in state_shapes.opt_state.slots}
-    return TrainState(params=pspecs,
-                      opt_state=OptState(step=P(), slots=slot_specs))
+    opt = state_shapes.opt_state
+    if getattr(opt, "layout", None) is not None:
+        slot_specs = {k: P(None, None) for k in opt.slots}
+        opt_spec = OptState(step=P(), slots=slot_specs, layout=opt.layout)
+    else:
+        slot_specs = {k: pspecs for k in opt.slots}
+        opt_spec = OptState(step=P(), slots=slot_specs)
+    return TrainState(params=pspecs, opt_state=opt_spec)
 
 
 # ----------------------------------------------------------------- batches

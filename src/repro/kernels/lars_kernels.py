@@ -1,22 +1,29 @@
-"""Pallas TPU kernels for the LARS update's two memory-bound phases.
+"""Pallas TPU megakernels for the LARS update's two memory-bound phases.
 
 The SystemML implementation of LARS pays ~5 full HBM passes per parameter
 per step (read w,g for ||w||; read g for ||g||; read w,g,m + write m for
-the momentum update; read w,m + write w for the apply). On TPU we fuse
-these into two passes:
+the momentum update; read w,m + write w for the apply) — and it pays the
+kernel-dispatch overhead once per LAYER per step (the paper's §6
+bottleneck). An earlier port of these kernels still launched per *leaf*.
 
-  * ``lars_norms``  — ONE joint pass producing (sum w^2, sum g^2)
-                      per layer slice (grid-accumulated f32 partials).
-  * ``lars_apply``  — ONE read-modify-write pass computing
-                      m' = mu*m + lr_l*(g + beta*w);  w' = w - m'.
+Both axes are now collapsed: the optimizer packs the ENTIRE parameter
+pytree into one ``(total_rows, lane)`` superbuffer
+(:mod:`repro.core.packing`) and each phase below runs as a single
+``pallas_call`` with a 1-D grid over row blocks — 2 launches per step
+total, independent of the number of parameter leaves or layers:
 
-Layout convention (packed by :mod:`repro.kernels.ops`): every parameter
-leaf is reshaped/padded to ``(L, M, C)`` where ``L`` is the layer-stack
-axis (1 for unstacked leaves), ``C`` is the lane dimension (multiple of
-128) and ``M`` the sublane row count. Blocks are ``(1, bm, C)`` so the
-VMEM working set is ``bm*C*4B`` per operand — bm=8, C=512 keeps all five
-operands of ``lars_apply`` under ~100 KB of VMEM, well inside v5e's 128 MB
-while leaving room for double buffering.
+  * ``norms_flat``  — ONE joint pass producing per-row-block partial
+                      ``(sum w^2, sum g^2)`` f32 sums; the caller folds
+                      blocks into per-layer-slice sums with a static
+                      ``segment_sum`` (layer slices are block-aligned).
+  * ``apply_flat``  — ONE read-modify-write pass computing
+                      ``m' = mu*m + lr_blk*(g + beta*w); w' = w - m'``
+                      with the per-layer local LR delivered as one scalar
+                      per row block.
+
+Blocks are ``(block_rows, lane)``; block_rows=8, lane=512 keeps all five
+operands of ``apply_flat`` under ~100 KB of VMEM, well inside v5e's
+128 MB while leaving room for double buffering.
 """
 
 from __future__ import annotations
@@ -31,37 +38,34 @@ from jax.experimental import pallas as pl
 # --------------------------------------------------------------------- norms
 
 def _norms_kernel(w_ref, g_ref, wsq_ref, gsq_ref):
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        wsq_ref[...] = jnp.zeros_like(wsq_ref)
-        gsq_ref[...] = jnp.zeros_like(gsq_ref)
-
     wf = w_ref[...].astype(jnp.float32)
     gf = g_ref[...].astype(jnp.float32)
-    wsq_ref[0, 0] += jnp.sum(wf * wf)
-    gsq_ref[0, 0] += jnp.sum(gf * gf)
+    wsq_ref[0, 0] = jnp.sum(wf * wf)
+    gsq_ref[0, 0] = jnp.sum(gf * gf)
 
 
-def lars_norms_packed(w3: jnp.ndarray, g3: jnp.ndarray, *, bm: int = 8,
-                      interpret: bool = True
-                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """(sum w^2, sum g^2) per leading slice of a packed (L, M, C) pair."""
-    L, M, C = w3.shape
-    assert M % bm == 0, (M, bm)
-    grid = (L, M // bm)
-    in_spec = pl.BlockSpec((1, bm, C), lambda l, j: (l, j, 0))
-    out_spec = pl.BlockSpec((1, 1), lambda l, j: (l, 0))
+def norms_flat(w2: jnp.ndarray, g2: jnp.ndarray, *, block_rows: int = 8,
+               interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row-block (sum w^2, sum g^2) over a packed (R, C) pair.
+
+    Returns two (R // block_rows,) f32 vectors — one partial sum per grid
+    step. One kernel launch regardless of how many leaves/layers are
+    packed into the buffer.
+    """
+    R, C = w2.shape
+    assert R % block_rows == 0, (R, block_rows)
+    nblk = R // block_rows
+    in_spec = pl.BlockSpec((block_rows, C), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
     wsq, gsq = pl.pallas_call(
         _norms_kernel,
-        grid=grid,
+        grid=(nblk,),
         in_specs=[in_spec, in_spec],
         out_specs=[out_spec, out_spec],
-        out_shape=[jax.ShapeDtypeStruct((L, 1), jnp.float32),
-                   jax.ShapeDtypeStruct((L, 1), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((nblk, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((nblk, 1), jnp.float32)],
         interpret=interpret,
-    )(w3, g3)
+    )(w2, g2)
     return wsq[:, 0], gsq[:, 0]
 
 
@@ -77,31 +81,33 @@ def _apply_kernel(lr_ref, w_ref, g_ref, m_ref, wout_ref, mout_ref, *,
     mout_ref[...] = m_new
 
 
-def lars_apply_packed(w3: jnp.ndarray, g3: jnp.ndarray, m3: jnp.ndarray,
-                      lr2: jnp.ndarray, *, momentum: float,
-                      weight_decay: float, bm: int = 8,
-                      interpret: bool = True
-                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Fused momentum+decay+apply over packed (L, M, C) leaves.
+def apply_flat(w2: jnp.ndarray, g2: jnp.ndarray, m2: jnp.ndarray,
+               lr_blocks: jnp.ndarray, *, momentum: float,
+               weight_decay: float, block_rows: int = 8,
+               interpret: bool = True
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused momentum+decay+apply over a packed (R, C) superbuffer.
 
-    lr2: (L, 1) f32 — the per-layer local learning rate gamma_t * lambda_l.
-    Returns (w_new (L,M,C) in w3.dtype, m_new (L,M,C) f32).
+    lr_blocks: (R // block_rows, 1) f32 — the per-layer local learning
+    rate gamma_t * lambda_l, pre-broadcast to one scalar per row block
+    (layer slices are block-aligned, so each block has a single owner).
+    Returns (w_new (R, C) in w2.dtype, m_new (R, C) f32). One launch.
     """
-    L, M, C = w3.shape
-    assert lr2.shape == (L, 1), lr2.shape
-    assert M % bm == 0, (M, bm)
-    grid = (L, M // bm)
-    blk = pl.BlockSpec((1, bm, C), lambda l, j: (l, j, 0))
-    lr_spec = pl.BlockSpec((1, 1), lambda l, j: (l, 0))
+    R, C = w2.shape
+    assert R % block_rows == 0, (R, block_rows)
+    nblk = R // block_rows
+    assert lr_blocks.shape == (nblk, 1), (lr_blocks.shape, nblk)
+    blk = pl.BlockSpec((block_rows, C), lambda i: (i, 0))
+    lr_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
     kern = functools.partial(_apply_kernel, momentum=momentum,
                              weight_decay=weight_decay)
     w_new, m_new = pl.pallas_call(
         kern,
-        grid=grid,
+        grid=(nblk,),
         in_specs=[lr_spec, blk, blk, blk],
         out_specs=[blk, blk],
-        out_shape=[jax.ShapeDtypeStruct((L, M, C), w3.dtype),
-                   jax.ShapeDtypeStruct((L, M, C), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((R, C), w2.dtype),
+                   jax.ShapeDtypeStruct((R, C), jnp.float32)],
         interpret=interpret,
-    )(lr2, w3, g3, m3)
+    )(lr_blocks, w2, g2, m2)
     return w_new, m_new

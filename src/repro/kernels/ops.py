@@ -1,13 +1,18 @@
 """Jit-ready public wrappers around the Pallas kernels.
 
 Responsibilities:
-  * pack arbitrary parameter leaves into the kernels' (L, M, C) layout
-    (pad with zeros — norms are unaffected; padded lanes are sliced away
-    after apply);
+  * expose the whole-pytree packed LARS phases (`lars_norms_packed`,
+    `lars_apply_packed`) over the superbuffer layout built by
+    :mod:`repro.core.packing` — 2 kernel launches per optimizer step
+    total, independent of leaf count;
+  * keep the historical per-leaf entry points (`lars_norms`,
+    `lars_apply`) as thin adapters over the same flat kernels for the
+    kernel sweeps/benchmarks — a single leaf is just a one-segment
+    layout;
   * pick interpret mode (CPU container -> interpret=True; real TPU ->
     compiled kernel);
-  * expose the same signatures as :mod:`repro.kernels.ref` so the
-    optimizer can swap implementations freely.
+  * expose the same signatures as :mod:`repro.kernels.ref` so callers
+    can swap implementations freely.
 """
 
 from __future__ import annotations
@@ -16,12 +21,12 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.core import packing
 from repro.kernels import lars_kernels, flash_decode as fd
 
-LANE = 512     # packed lane dim (multiple of 128)
-BM = 8         # sublane rows per block
+LANE = packing.LANE      # packed lane dim (multiple of 128)
+BM = packing.BLOCK_ROWS  # sublane rows per block
 
 
 @functools.cache
@@ -29,39 +34,54 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-# ------------------------------------------------------------------- packing
+# ------------------------------------------------------------ packed kernels
 
-def _pack(x: jnp.ndarray, stacked: bool) -> tuple[jnp.ndarray, int]:
-    """Reshape/pad a leaf to (L, M, LANE) with M % BM == 0.
+def lars_norms_packed(layout: packing.PackedLayout, wbuf: jnp.ndarray,
+                      gbuf: jnp.ndarray
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Joint per-layer-slice (||w||, ||g||) over the whole superbuffer.
 
-    Returns (packed, n) where n is the original per-slice element count.
+    ONE Pallas launch (per-block partial sums) + a static segment fold.
+    Returns two (num_slices,) f32 vectors.
     """
-    L = x.shape[0] if stacked else 1
-    flat = x.reshape(L, -1)
-    n = flat.shape[1]
-    per_tile = LANE * BM
-    n_pad = int(np.ceil(n / per_tile)) * per_tile
-    if n_pad != n:
-        flat = jnp.pad(flat, ((0, 0), (0, n_pad - n)))
-    return flat.reshape(L, n_pad // LANE, LANE), n
+    wsq_blk, gsq_blk = lars_kernels.norms_flat(
+        wbuf, gbuf, block_rows=layout.block_rows, interpret=_interpret())
+    ids = packing.block_slice_ids(layout)
+    wsq = jax.ops.segment_sum(wsq_blk, ids, num_segments=layout.num_slices,
+                              indices_are_sorted=True)
+    gsq = jax.ops.segment_sum(gsq_blk, ids, num_segments=layout.num_slices,
+                              indices_are_sorted=True)
+    return jnp.sqrt(wsq), jnp.sqrt(gsq)
 
 
-def _unpack(x3: jnp.ndarray, n: int, shape, stacked: bool) -> jnp.ndarray:
-    L = x3.shape[0]
-    flat = x3.reshape(L, -1)[:, :n]
-    return flat.reshape(shape)
+def lars_apply_packed(layout: packing.PackedLayout, wbuf: jnp.ndarray,
+                      gbuf: jnp.ndarray, mbuf: jnp.ndarray,
+                      lr_slices: jnp.ndarray, *, momentum: float,
+                      weight_decay: float
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused m' = mu*m + lr_l*(g + beta*w); w' = w - m' over the whole
+    superbuffer. lr_slices: (num_slices,) per-layer local LR. ONE launch.
+    """
+    lr_blocks = packing.blocks_expand(layout,
+                                      lr_slices.astype(jnp.float32))
+    return lars_kernels.apply_flat(
+        wbuf, gbuf, mbuf, lr_blocks, momentum=momentum,
+        weight_decay=weight_decay, block_rows=layout.block_rows,
+        interpret=_interpret())
 
 
-# ------------------------------------------------------------------- kernels
+# ----------------------------------------------------- per-leaf adapters
+
+def _leaf_layout(x: jnp.ndarray, stacked: bool) -> packing.PackedLayout:
+    return packing.build_layout({"x": x}, {"x": stacked})
+
 
 def lars_norms(w: jnp.ndarray, g: jnp.ndarray, *, stacked: bool = False
                ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Joint (||w||, ||g||); () or (L,) f32. Pallas-fused single pass."""
-    w3, _ = _pack(w, stacked)
-    g3, _ = _pack(g, stacked)
-    wsq, gsq = lars_kernels.lars_norms_packed(w3, g3, bm=BM,
-                                              interpret=_interpret())
-    w_norm, g_norm = jnp.sqrt(wsq), jnp.sqrt(gsq)
+    layout = _leaf_layout(w, stacked)
+    w_norm, g_norm = lars_norms_packed(layout, packing.pack(layout, {"x": w}),
+                                       packing.pack(layout, {"x": g}))
     if not stacked:
         return w_norm[0], g_norm[0]
     return w_norm, g_norm
@@ -79,16 +99,14 @@ def lars_apply(w: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray, *,
     # A (L>1,) lr vector implies a stacked leaf. (L==1 packs identically
     # either way, so size-based inference is exact.)
     stacked = bool(lr.size > 1)
-    w3, n = _pack(w, stacked)
-    g3, _ = _pack(g, stacked)
-    m3, _ = _pack(m, stacked)
-    L = w3.shape[0]
-    lr2 = jnp.broadcast_to(lr.reshape(-1, 1), (L, 1)).astype(jnp.float32)
-    w_new3, m_new3 = lars_kernels.lars_apply_packed(
-        w3, g3, m3, lr2, momentum=momentum, weight_decay=weight_decay,
-        bm=BM, interpret=_interpret())
-    return (_unpack(w_new3, n, w.shape, stacked),
-            _unpack(m_new3, n, m.shape, stacked))
+    layout = _leaf_layout(w, stacked)
+    lr_slices = jnp.broadcast_to(lr.reshape(-1), (layout.num_slices,))
+    w_new, m_new = lars_apply_packed(
+        layout, packing.pack(layout, {"x": w}),
+        packing.pack(layout, {"x": g}), packing.pack(layout, {"x": m}),
+        lr_slices, momentum=momentum, weight_decay=weight_decay)
+    return (packing.unpack(layout, w_new)["x"],
+            packing.unpack(layout, m_new, dtype=jnp.float32)["x"])
 
 
 def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

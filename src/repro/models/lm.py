@@ -37,6 +37,31 @@ from repro.distributed.constrain import shard_batch
 Pytree = Any
 
 
+@jax.custom_vjp
+def _carry_barrier(x):
+    """Differentiation-safe ``lax.optimization_barrier``.
+
+    The raw primitive has no JVP/VJP rule, which kills `value_and_grad`
+    through the layer scan. Straight-through custom_vjp: forward keeps
+    the barrier; backward barriers the cotangent the same way (the
+    transposed scan has the same hoisting exposure on its carry).
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _carry_barrier_fwd(x):
+    return _carry_barrier(x), None
+
+
+def _carry_barrier_bwd(_, ct):
+    # recurse through the wrapper, not the raw primitive, so the VJP is
+    # itself differentiable (second-order autodiff through the scan)
+    return (_carry_barrier(ct),)
+
+
+_carry_barrier.defvjp(_carry_barrier_fwd, _carry_barrier_bwd)
+
+
 class LanguageModel:
     def __init__(self, cfg):
         assert cfg.family in ("dense", "moe", "ssm", "hybrid", "vlm"), cfg.family
@@ -173,7 +198,7 @@ class LanguageModel:
             # convert (rmsnorm) into the scan's saved-carry stack, which
             # would store all L carries in f32 — 2x peak memory
             # (observed: 172 GB/device on qwen2-72b; §Perf iteration 2)
-            x = jax.lax.optimization_barrier(x)
+            x = _carry_barrier(x)
             params_l, idx = inp
             x, aux_l = self._layer_train(params_l, x, positions, prefix_len,
                                          idx, shared)

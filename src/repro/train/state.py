@@ -1,8 +1,20 @@
 """TrainState: the single pytree carried across steps.
 
 The ``stacked`` marker (which leaves are (L, ...) layer stacks) is STATIC
-per architecture — it lives on the factory closure, not in the state, so
-the state stays a pure array pytree (shardable, checkpointable).
+per architecture. It is threaded into ``optimizer.init`` so the optimizer
+state is born on the flat-packed layer-wise substrate: slot buffers
+(momentum, second moment) live packed in one superbuffer across steps and
+the OptState carries the static PackedLayout as pytree metadata. Pass
+``packed=False`` to keep per-leaf slot pytrees instead — the reference
+layout used when slots must shard leaf-for-leaf alongside FSDP params
+(the pjit dry-run path builds its states that way via ``opt.init(p)``).
+
+Memory trade-off under pjit: the packed superbuffers (params/grads
+repacked per step, slots persistent) are REPLICATED per device — right
+for single-replica-group training, wrong for FSDP-scale models where
+the point is sharding optimizer memory 1/(data*model). Use
+``packed=False`` there; `distributed/sharding.state_pspecs` handles
+both layouts.
 """
 
 from __future__ import annotations
@@ -19,6 +31,11 @@ class TrainState(NamedTuple):
     opt_state: OptState
 
 
-def create_train_state(model, optimizer, key) -> TrainState:
+def create_train_state(model, optimizer, key, *,
+                       packed: bool = True) -> TrainState:
     params = model.init(key)
-    return TrainState(params=params, opt_state=optimizer.init(params))
+    marker_fn = getattr(model, "stacked_marker", None)
+    stacked = (marker_fn(params)
+               if packed and marker_fn is not None else None)
+    return TrainState(params=params,
+                      opt_state=optimizer.init(params, stacked=stacked))

@@ -10,7 +10,11 @@ model forward needs:
 
 The returned step is a pure function (TrainState, batch) -> (TrainState,
 metrics) suitable for `jax.jit` with shardings. The LARS/LAMB `stacked`
-marker is baked into the closure (static per arch).
+marker is baked into the closure (static per arch); when the TrainState
+was created on the flat-packed substrate (create_train_state default),
+the opt state carries the matching PackedLayout and the update runs the
+whole-pytree packed engine — the marker passed here is then only a
+consistency check against the init-time layout.
 """
 
 from __future__ import annotations

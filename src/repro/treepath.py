@@ -1,0 +1,16 @@
+"""Shared pytree key-path formatting.
+
+One canonical "/"-joined rendering of `jax.tree_util` key paths, used by
+checkpointing (npz keys), the packed-substrate segment table, and the
+per-layer telemetry — so a keypath-format change lands in one place and
+checkpoint keys / segment names cannot drift apart.
+"""
+
+from __future__ import annotations
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(parts)

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import lars, lamb, sgd, adamw, schedules, scaling
 from repro.core import trust_ratio as tr
@@ -218,6 +218,78 @@ def test_scaling_policies():
     assert scaling.scaled_lr(0.1, 256, 1024, "linear") == pytest.approx(0.4)
     assert scaling.scaled_lr(0.1, 256, 1024, "sqrt") == pytest.approx(0.2)
     assert scaling.scaled_lr(0.1, 256, 1024, "none") == pytest.approx(0.1)
+
+
+# ------------------------------------------- flat-packed substrate parity
+
+_MIXED_PARAMS = {
+    "w": jax.random.normal(jax.random.PRNGKey(0), (37, 19)),
+    "stack": jax.random.normal(jax.random.PRNGKey(1), (3, 11, 13)),
+    "b": jnp.ones((7,)),
+    "emb": (jax.random.normal(jax.random.PRNGKey(2), (50, 33)) * 0.1
+            ).astype(jnp.bfloat16),
+}
+_MIXED_STACKED = {"w": False, "stack": True, "b": False, "emb": False}
+
+
+@pytest.mark.parametrize("make", [
+    lambda: sgd(0.1), lambda: sgd(0.1, nesterov=True), lambda: lars(0.1),
+    lambda: lamb(0.05), lambda: adamw(0.05)])
+def test_packed_layout_matches_tree_layout(make):
+    """The flat-packed engine must agree with the per-leaf reference
+    engine leaf-by-leaf, for stacked and unstacked (and bf16) leaves,
+    across several steps (slot buffers stay packed between steps)."""
+    params = _MIXED_PARAMS
+    grads = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(3), p.shape,
+                                    jnp.float32).astype(p.dtype), params)
+    opt = make()
+    st_tree = opt.init(params)
+    st_pack = opt.init(params, stacked=_MIXED_STACKED)
+    assert st_pack.layout is not None and st_tree.layout is None
+    pt, pp = params, params
+    for _ in range(3):
+        pt, st_tree = opt.update(grads, st_tree, pt, stacked=_MIXED_STACKED)
+        pp, st_pack = opt.update(grads, st_pack, pp, stacked=_MIXED_STACKED)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=2e-5, atol=1e-5), pt, pp)
+
+
+def test_use_pallas_requires_packed_layout():
+    """The megakernel path must refuse to silently degrade: a tree-layout
+    state (no stacked marker at init) has no superbuffer to fuse over."""
+    opt = lars(0.1, use_pallas=True)
+    state = opt.init(_MIXED_PARAMS)          # tree layout
+    grads = jax.tree_util.tree_map(jnp.ones_like, _MIXED_PARAMS)
+    with pytest.raises(ValueError, match="use_pallas"):
+        opt.update(grads, state, _MIXED_PARAMS)
+
+
+def test_packed_update_rejects_marker_mismatch():
+    opt = lars(0.1)
+    state = opt.init(_MIXED_PARAMS, stacked=_MIXED_STACKED)
+    grads = jax.tree_util.tree_map(jnp.ones_like, _MIXED_PARAMS)
+    bad = dict(_MIXED_STACKED, stack=False)
+    with pytest.raises(ValueError, match="stacked marker"):
+        opt.update(grads, state, _MIXED_PARAMS, stacked=bad)
+
+
+def test_packed_state_is_jittable_and_step_counts():
+    opt = lamb(0.05)
+    state = opt.init(_MIXED_PARAMS, stacked=_MIXED_STACKED)
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.full(p.shape, 0.5, jnp.float32).astype(p.dtype),
+        _MIXED_PARAMS)
+    upd = jax.jit(lambda g, s, p: opt.update(g, s, p))
+    p = _MIXED_PARAMS
+    for _ in range(3):
+        p, state = upd(grads, state, p)
+    assert int(state.step) == 3
+    assert state.layout is not None
+    for leaf in jax.tree_util.tree_leaves(p):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
 
 
 # ------------------------------------------------------------------ generic

@@ -65,25 +65,63 @@ def test_lars_apply_matches_ref(shape, stacked, dtype):
     assert got_m.dtype == jnp.float32
 
 
+_PARAMS = {"w": jax.random.normal(jax.random.PRNGKey(0), (37, 19)),
+           "stack": jax.random.normal(jax.random.PRNGKey(1), (3, 11, 13)),
+           "b": jnp.ones((7,))}
+_STACKED = {"w": False, "stack": True, "b": False}
+
+
+def _grads(params, seed=2):
+    return jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(seed), p.shape),
+        params)
+
+
 def test_lars_optimizer_pallas_path_equals_jnp_path():
-    """End-to-end: lars(use_pallas=True) == lars(use_pallas=False)."""
-    from repro.core import lars
-    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (37, 19)),
-              "stack": jax.random.normal(jax.random.PRNGKey(1), (3, 11, 13)),
-              "b": jnp.ones((7,))}
-    grads = jax.tree_util.tree_map(
-        lambda p: jax.random.normal(jax.random.PRNGKey(2), p.shape), params)
-    stacked = {"w": False, "stack": True, "b": False}
+    """End-to-end: the fused packed Pallas path == the per-leaf jnp
+    reference path, leaf-by-leaf, params AND momentum."""
+    from repro.core import lars, packing
+    grads = _grads(_PARAMS)
 
     o1, o2 = lars(0.2), lars(0.2, use_pallas=True)
-    p1, s1 = o1.update(grads, o1.init(params), params, stacked=stacked)
-    p2, s2 = o2.update(grads, o2.init(params), params, stacked=stacked)
+    p1, s1 = o1.update(grads, o1.init(_PARAMS), _PARAMS, stacked=_STACKED)
+    p2, s2 = o2.update(grads, o2.init(_PARAMS, stacked=_STACKED), _PARAMS,
+                       stacked=_STACKED)
     jax.tree_util.tree_map(
-        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6),
+        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5),
         p1, p2)
+    m2 = packing.unpack(s2.layout, s2.slots["momentum"], dtype=jnp.float32)
     jax.tree_util.tree_map(
-        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6),
-        s1.slots, s2.slots)
+        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5),
+        s1.slots["momentum"], m2)
+
+
+@pytest.mark.parametrize("params,stacked", [
+    (_PARAMS, _STACKED),
+    # many more leaves: launch count must NOT scale with the pytree
+    ({f"w{i}": jax.random.normal(jax.random.PRNGKey(i), (16 + i, 24))
+      for i in range(9)} | {"stk": jnp.ones((5, 6, 7)), "b": jnp.ones((3,))},
+     {f"w{i}": False for i in range(9)} | {"stk": True, "b": False}),
+])
+def test_whole_pytree_lars_is_two_pallas_launches(params, stacked):
+    """Acceptance: the packed LARS update issues exactly 2 pallas_call
+    launches per step regardless of leaf count, and its results match the
+    jnp reference path leaf-by-leaf for stacked and unstacked leaves."""
+    from repro.core import lars
+    from repro.kernels.introspect import count_pallas_launches
+    grads = _grads(params)
+    opt = lars(0.2, use_pallas=True)
+    state = opt.init(params, stacked=stacked)
+    n = count_pallas_launches(
+        lambda g, s, p: opt.update(g, s, p), grads, state, params)
+    assert n == 2, f"expected 2 pallas launches/step, traced {n}"
+
+    ref = lars(0.2)
+    p_ref, _ = ref.update(grads, ref.init(params), params, stacked=stacked)
+    p_got, _ = opt.update(grads, state, params, stacked=stacked)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5),
+        p_ref, p_got)
 
 
 # -------------------------------------------------------------- flash_decode

@@ -1,0 +1,130 @@
+"""Unit tests for the flat-packed layer-wise substrate
+(:mod:`repro.core.packing`): segment table construction, pack/unpack
+roundtrips, per-slice reductions, and checkpointability of packed
+optimizer states."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lars, packing
+
+
+def _tree():
+    return {
+        "emb": jax.random.normal(jax.random.PRNGKey(0), (100, 33)),
+        "layers": {
+            "wq": jax.random.normal(jax.random.PRNGKey(1), (4, 17, 23)),
+            "scale": jnp.ones((4, 17)),
+        },
+        "bias": jnp.arange(5, dtype=jnp.float32),
+        "half": (jax.random.normal(jax.random.PRNGKey(2), (9, 130)) * 0.1
+                 ).astype(jnp.bfloat16),
+    }
+
+
+def _marker():
+    return {"emb": False, "layers": {"wq": True, "scale": True},
+            "bias": False, "half": False}
+
+
+def test_layout_segment_table():
+    tree, marker = _tree(), _marker()
+    layout = packing.build_layout(tree, marker)
+    # one slice per unstacked leaf, L per stacked leaf
+    assert layout.num_slices == 1 + 4 + 4 + 1 + 1
+    assert layout.total_rows % layout.block_rows == 0
+    # segments tile the row space contiguously, block-aligned
+    offset = 0
+    for seg in layout.segments:
+        assert seg.row_offset == offset
+        assert seg.rows % layout.block_rows == 0
+        assert seg.n <= seg.rows * layout.lane
+        offset += seg.layers * seg.rows
+    assert offset == layout.total_rows
+    # adaptation flags follow slice rank (>1 adapts)
+    by_name = {s.name: s for s in layout.segments}
+    assert by_name["emb"].adapt
+    assert by_name["layers/wq"].adapt
+    assert not by_name["layers/scale"].adapt      # (L, d): rank-1 slices
+    assert not by_name["bias"].adapt
+
+
+def test_layout_is_cached_and_hashable():
+    tree, marker = _tree(), _marker()
+    l1 = packing.build_layout(tree, marker)
+    l2 = packing.build_layout(tree, marker)
+    assert l1 is l2          # lru-cached on the static structure
+    assert hash(l1) == hash(l2)
+
+
+def test_pack_unpack_roundtrip_preserves_values_and_dtypes():
+    tree, marker = _tree(), _marker()
+    layout = packing.build_layout(tree, marker)
+    buf = packing.pack(layout, tree)
+    assert buf.shape == layout.buffer_shape
+    assert buf.dtype == jnp.float32
+    out = packing.unpack(layout, buf)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_slice_norms_match_per_leaf_norms():
+    tree, marker = _tree(), _marker()
+    layout = packing.build_layout(tree, marker)
+    buf = packing.pack(layout, tree)
+    got = np.sqrt(np.asarray(packing.slice_sumsq(layout, buf)))
+    expected = []
+    for seg, leaf in zip(layout.segments,
+                         layout.treedef.flatten_up_to(tree)):
+        lf = np.asarray(leaf, np.float32).reshape(seg.layers, -1)
+        expected.extend(np.sqrt(np.sum(lf * lf, axis=1)))
+    np.testing.assert_allclose(got, expected, rtol=1e-5)
+
+
+def test_rows_and_blocks_expand_agree_with_segments():
+    tree, marker = _tree(), _marker()
+    layout = packing.build_layout(tree, marker)
+    per_slice = jnp.arange(layout.num_slices, dtype=jnp.float32)
+    rows = np.asarray(packing.rows_expand(layout, per_slice))[:, 0]
+    blocks = np.asarray(packing.blocks_expand(layout, per_slice))[:, 0]
+    assert rows.shape == (layout.total_rows,)
+    assert blocks.shape == (layout.num_blocks,)
+    for seg in layout.segments:
+        for layer in range(seg.layers):
+            sl = seg.slice_offset + layer
+            r0 = seg.row_offset + layer * seg.rows
+            assert (rows[r0:r0 + seg.rows] == sl).all()
+    np.testing.assert_array_equal(rows[::layout.block_rows], blocks)
+
+
+def test_packed_opt_state_checkpoint_roundtrip():
+    """A packed OptState is a plain array pytree + static metadata, so it
+    must survive the npz checkpoint path unchanged."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    tree, marker = _tree(), _marker()
+    opt = lars(0.1)
+    state = opt.init(tree, stacked=marker)
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.ones(p.shape, jnp.float32).astype(p.dtype), tree)
+    _, state = opt.update(grads, state, tree)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "opt.npz")
+        save_checkpoint(path, state)
+        out = restore_checkpoint(path, state)
+    assert out.layout == state.layout
+    np.testing.assert_array_equal(np.asarray(out.slots["momentum"]),
+                                  np.asarray(state.slots["momentum"]))
+    assert int(out.step) == int(state.step)
+
+
+def test_build_layout_rejects_empty_tree():
+    with pytest.raises(ValueError, match="empty"):
+        packing.build_layout({}, {})
