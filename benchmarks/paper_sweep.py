@@ -12,7 +12,16 @@ claims validated are the paper's *shape*:
   C3 LARS holds materially higher accuracy at large batch;
   C4 generalization error grows much faster for SGD than LARS.
 
+Every cell trains through the large-batch TrainPipeline, so the sweep
+can take ``--accum-steps`` (global batches beyond one-step memory) and
+``--precision bf16`` (f32 master weights). ``--accum-bench`` skips the
+accuracy sweep and instead measures the execution pipeline itself — a
+global batch 8x the largest single-step microbatch, steps/s and
+compiled peak-memory for f32 vs bf16 — appending the results to
+``BENCH_optimizer.json``.
+
 Usage: PYTHONPATH=src python -m benchmarks.paper_sweep [--quick]
+       PYTHONPATH=src python -m benchmarks.paper_sweep --accum-bench
 """
 
 from __future__ import annotations
@@ -20,6 +29,7 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
 import time
 
 import jax
@@ -31,8 +41,8 @@ from repro.core import lars, sgd, lamb
 from repro.core.scaling import scaled_lr
 from repro.data import batch_iterator, synthetic_mnist
 from repro.models import build_model
-from repro.train import (create_train_state, generalization_error,
-                         make_eval_step, make_train_step)
+from repro.train import (TrainPipeline, generalization_error,
+                         make_eval_step)
 
 # Paper Table 1
 INIT_LR = 0.01
@@ -59,7 +69,8 @@ def make_opt(name: str, base_lr: float, *, trust_coef: float = TRUST_COEF,
 
 def run_cell(opt_name: str, batch: int, *, epochs: int, data, seed: int = 0,
              trust_coef: float = TRUST_COEF, lr_policy: str = "none",
-             base_lr: float = INIT_LR) -> dict:
+             base_lr: float = INIT_LR, accum_steps: int = 1,
+             precision: str = "f32") -> dict:
     x_tr, y_tr, x_te, y_te = data
     n = len(x_tr)
     steps = max(1, math.ceil(epochs * n / batch))
@@ -67,15 +78,20 @@ def run_cell(opt_name: str, batch: int, *, epochs: int, data, seed: int = 0,
     model = build_model(cfg)
     opt = make_opt(opt_name, base_lr, trust_coef=trust_coef,
                    lr_policy=lr_policy, batch=batch)
-    state = create_train_state(model, opt, jax.random.key(seed))
-    step = jax.jit(make_train_step(model, opt, cfg), donate_argnums=(0,))
+    eff_batch = min(batch, n)
+    if eff_batch % accum_steps:
+        raise ValueError(f"batch {eff_batch} not divisible by "
+                         f"accum_steps={accum_steps}")
+    pipe = TrainPipeline(model, opt, cfg, accum_steps=accum_steps,
+                         precision=precision)
+    state = pipe.init_state(jax.random.key(seed))
     eval_step = jax.jit(make_eval_step(model, cfg))
 
-    it = batch_iterator(x_tr, y_tr, batch=min(batch, n), seed=seed)
+    it = batch_iterator(x_tr, y_tr, batch=eff_batch, seed=seed)
     t0 = time.perf_counter()
     for i in range(steps):
         b = next(it)
-        state, metrics = step(state, {"x": jnp.asarray(b["x"]),
+        state, metrics = pipe(state, {"x": jnp.asarray(b["x"]),
                                       "y": jnp.asarray(b["y"])})
     loss = float(metrics["loss"])
 
@@ -90,10 +106,81 @@ def run_cell(opt_name: str, batch: int, *, epochs: int, data, seed: int = 0,
     train_acc = acc_of(x_tr, y_tr)
     test_acc = acc_of(x_te, y_te)
     return {"optimizer": opt_name, "batch": batch, "steps": steps,
+            "accum_steps": accum_steps, "precision": precision,
             "loss": loss, "train_acc": round(train_acc, 4),
             "test_acc": round(test_acc, 4),
             "gen_error": round(generalization_error(train_acc, test_acc), 4),
             "wall_s": round(time.perf_counter() - t0, 1)}
+
+
+# ------------------------------------------------- execution-pipeline bench
+
+def accum_bench(*, micro_batch: int = 256, accum_steps: int = 8,
+                steps: int = 10, out: str = "BENCH_optimizer.json") -> dict:
+    """Benchmark the execution pipeline itself (not accuracy): a global
+    batch ``accum_steps``x the largest single-step microbatch, run via
+    scan accumulation, for f32 vs bf16 — steps/s and compiled
+    peak-memory deltas, merged into ``out`` under
+    ``"large_batch_pipeline"`` (the optimizer bench owns the rest of the
+    file, so run this after it)."""
+    assert accum_steps >= 8, "bench contract: global >= 8x microbatch"
+    global_batch = micro_batch * accum_steps
+    cfg = get_config("lenet-mnist")
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    batch = {"x": jnp.asarray(rng.random((global_batch, 28, 28, 1)),
+                              jnp.float32),
+             "y": jnp.asarray(rng.integers(0, 10, global_batch), jnp.int32)}
+    rows = []
+    for precision in ("f32", "bf16"):
+        opt = make_opt("lars", INIT_LR)
+        pipe = TrainPipeline(model, opt, cfg, accum_steps=accum_steps,
+                             precision=precision)
+        state = pipe.init_state(jax.random.key(0))
+        peak = None
+        try:
+            mem = pipe.lower(state, batch).compile().memory_analysis()
+            peak = int(mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                       + mem.output_size_in_bytes)
+        except Exception:
+            pass  # backend without memory analysis: report timing only
+        state, m = pipe(state, batch)          # compile + warmup
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, m = pipe(state, batch)
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / steps
+        rows.append({"precision": precision, "micro_batch": micro_batch,
+                     "accum_steps": accum_steps,
+                     "global_batch": global_batch,
+                     "steps_per_s": 1.0 / dt,
+                     "examples_per_s": global_batch / dt,
+                     "peak_bytes": peak,
+                     "loss": float(m["loss"])})
+        peak_s = f"{peak / 1e6:8.1f} MB" if peak is not None else "   n/a"
+        print(f"{precision:5s} global={global_batch} (micro={micro_batch} "
+              f"x accum={accum_steps})  {1.0 / dt:6.2f} steps/s  "
+              f"{global_batch / dt:9.0f} ex/s  peak {peak_s}", flush=True)
+
+    by = {r["precision"]: r for r in rows}
+    deltas = {"bf16_vs_f32_steps_per_s":
+              by["bf16"]["steps_per_s"] / by["f32"]["steps_per_s"] - 1.0}
+    if by["f32"]["peak_bytes"] and by["bf16"]["peak_bytes"]:
+        deltas["bf16_vs_f32_peak_bytes"] = \
+            by["bf16"]["peak_bytes"] / by["f32"]["peak_bytes"] - 1.0
+    section = {"backend": jax.default_backend(), "rows": rows,
+               "deltas": deltas}
+    payload = {}
+    if out and os.path.exists(out):
+        with open(out) as f:
+            payload = json.load(f)
+    payload["large_batch_pipeline"] = section
+    if out:
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"merged large_batch_pipeline section into {out}")
+    return section
 
 
 def main() -> None:
@@ -109,7 +196,21 @@ def main() -> None:
     ap.add_argument("--base-lr", type=float, default=INIT_LR)
     ap.add_argument("--n-train", type=int, default=None)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--accum-steps", type=int, default=1,
+                    help="microbatches accumulated per update in each cell")
+    ap.add_argument("--precision", default="f32", choices=("f32", "bf16"))
+    ap.add_argument("--accum-bench", action="store_true",
+                    help="skip the accuracy sweep; benchmark the "
+                    "accumulation pipeline (f32 vs bf16) into "
+                    "BENCH_optimizer.json")
     args = ap.parse_args()
+
+    if args.accum_bench:
+        micro, accum = (64, 8) if args.quick else (256, 8)
+        accum_bench(micro_batch=micro, accum_steps=accum,
+                    steps=3 if args.quick else 10,
+                    out=args.out or "BENCH_optimizer.json")
+        return
 
     if args.quick:
         n_train, n_test = 2048, 512
@@ -133,7 +234,9 @@ def main() -> None:
         for opt_name in args.optimizers:
             row = run_cell(opt_name, batch, epochs=epochs, data=data,
                            trust_coef=args.trust_coef,
-                           lr_policy=args.lr_policy, base_lr=args.base_lr)
+                           lr_policy=args.lr_policy, base_lr=args.base_lr,
+                           accum_steps=args.accum_steps,
+                           precision=args.precision)
             rows.append(row)
             print(f"{row['optimizer']:6s} {row['batch']:6d} "
                   f"{row['steps']:6d} {row['train_acc']:7.4f} "

@@ -17,14 +17,20 @@ from repro.data import synthetic_mnist       # noqa: E402
 
 def main() -> None:
     data = synthetic_mnist(4096, 1024, seed=0)
-    print(f"{'opt':6s} {'batch':>6s} {'train':>7s} {'test':>7s} "
-          f"{'gen_err':>8s}")
-    for batch in (64, 1024):
+    print(f"{'opt':6s} {'batch':>6s} {'accum':>6s} {'train':>7s} "
+          f"{'test':>7s} {'gen_err':>8s}")
+    # the 1024 cell runs its global batch through 4 accumulated
+    # microbatches of 256 — the TrainPipeline path that lets the sweep
+    # exceed single-step device memory (optimizer update + LARS trust
+    # ratio still fire once per global batch).
+    for batch, accum in ((64, 1), (1024, 4)):
         for opt in ("sgd", "lars"):
             # the validated Protocol B (EXPERIMENTS.md §Paper-validation)
             row = run_cell(opt, batch, epochs=12, data=data,
-                           trust_coef=0.02, lr_policy="linear")
+                           trust_coef=0.02, lr_policy="linear",
+                           accum_steps=accum)
             print(f"{row['optimizer']:6s} {row['batch']:6d} "
+                  f"{row['accum_steps']:6d} "
                   f"{row['train_acc']:7.4f} {row['test_acc']:7.4f} "
                   f"{row['gen_error']:8.4f}")
 

@@ -7,7 +7,9 @@ d_model 576, vocab 49152), layer-scanned + remat, LARS with sqrt
 batch-size LR scaling and warmup.
 
 Run: PYTHONPATH=src python examples/lm_pretrain.py --steps 300 --batch 8
-(CPU: ~1-2 s/step at batch 8, seq 256.)
+(CPU: ~1-2 s/step at batch 8, seq 256. Add --accum-steps 4 --precision
+bf16 to run a 4x global batch through the accumulation pipeline with f32
+master weights.)
 """
 
 import argparse
@@ -21,13 +23,16 @@ from repro.core import lars, schedules
 from repro.core.scaling import scaled_lr
 from repro.data import TokenTaskConfig, token_batches
 from repro.models import build_model
-from repro.train import create_train_state, make_train_step, train_loop
+from repro.train import TrainPipeline, train_loop
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="GLOBAL batch (split across --accum-steps)")
+    ap.add_argument("--accum-steps", type=int, default=1)
+    ap.add_argument("--precision", default="f32", choices=("f32", "bf16"))
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--base-lr", type=float, default=0.02)
     args = ap.parse_args()
@@ -38,18 +43,20 @@ def main() -> None:
     opt = lars(schedules.with_warmup(
         schedules.cosine_decay(lr0, args.steps), max(args.steps // 20, 1)),
         trust_coefficient=0.01)
-    state = create_train_state(model, opt, jax.random.key(0))
+    pipe = TrainPipeline(model, opt, cfg, accum_steps=args.accum_steps,
+                         precision=args.precision)
+    state = pipe.init_state(jax.random.key(0))
     n = sum(x.size for x in jax.tree_util.tree_leaves(state.params))
     print(f"smollm-135m: {n:,} params (full config); "
-          f"batch={args.batch} seq={args.seq} lr0={lr0:.4f}")
+          f"global_batch={args.batch} accum={args.accum_steps} "
+          f"precision={args.precision} seq={args.seq} lr0={lr0:.4f}")
 
     task = TokenTaskConfig(vocab_size=4096, seed=0)
     batches = ({"tokens": jnp.asarray(t[:, :args.seq] % cfg.vocab_size)}
                for t in token_batches(task, batch=args.batch,
                                       seq_len=args.seq))
-    step = make_train_step(model, opt, cfg)
     t0 = time.perf_counter()
-    state, hist = train_loop(step, state, batches, args.steps,
+    state, hist = train_loop(pipe, state, batches, args.steps,
                              log_every=max(args.steps // 20, 1))
     dt = time.perf_counter() - t0
     print(f"{args.steps} steps in {dt:.1f}s ({dt/args.steps:.2f} s/step); "

@@ -1,3 +1,5 @@
-"""Checkpointing: flat-path npz pytree save/restore."""
+"""Checkpointing: flat-path npz pytree save/restore, including full
+TrainState (params + packed opt slots + step) for resumable runs."""
 
-from repro.checkpoint.npz import save_checkpoint, restore_checkpoint  # noqa: F401
+from repro.checkpoint.npz import (save_checkpoint, restore_checkpoint,  # noqa: F401
+                                  save_train_state, restore_train_state)

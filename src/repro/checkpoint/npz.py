@@ -3,6 +3,14 @@
 Leaves are stored under their joined tree path ("params/layers/attn/wq");
 restore rebuilds into a caller-supplied target structure (so dtypes and
 shardings are re-established by the caller's device_put).
+
+``save_train_state`` / ``restore_train_state`` round-trip the FULL
+:class:`~repro.train.state.TrainState` — params, every packed optimizer
+slot buffer (momentum / second moment / f32 master weights) and the step
+counter — so large-batch runs are resumable mid-schedule. The packed
+``layout`` is pytree *metadata*, not a leaf: it is reconstructed by the
+caller's freshly-initialized template state, and the restore validates
+the stored buffers against the template's shapes.
 """
 
 from __future__ import annotations
@@ -49,3 +57,43 @@ def restore_checkpoint(path: str, target: Pytree) -> Pytree:
     new_leaves = [stored[path_str(path)].astype(np.asarray(leaf).dtype)
                   for path, leaf in leaves_with_path]
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def save_train_state(path: str, state: Any) -> None:
+    """Persist a full TrainState (params + opt slots + step) to npz."""
+    save_checkpoint(path, state)
+
+
+def restore_train_state(path: str, template: Any) -> Any:
+    """Restore a TrainState into ``template``'s structure.
+
+    ``template`` is a freshly-initialized state from the same
+    (model, optimizer, precision) triple — it supplies the pytree
+    structure, dtypes, and the static packed layout; the checkpoint
+    supplies every tensor, including the step counter. Mismatches fail
+    loudly rather than silently corrupting the run: a shape mismatch
+    (different arch, different packing) and ALSO a checkpoint leaf the
+    template has no slot for (e.g. a bf16-policy checkpoint's f32
+    master weights restored into an f32-policy state, which would
+    otherwise silently drop the master and change the trajectory).
+    """
+    with np.load(path if path.endswith(".npz") else path + ".npz") as data:
+        stored_keys = set(data.files)
+    template_keys = {path_str(p) for p, _ in
+                     jax.tree_util.tree_leaves_with_path(template)}
+    extra = stored_keys - template_keys
+    if extra:
+        raise ValueError(
+            f"checkpoint has leaves the template cannot hold: "
+            f"{sorted(extra)[:5]} — wrong optimizer/precision for this "
+            "checkpoint (e.g. restoring a bf16 master-weight state "
+            "without precision='bf16')")
+    restored = restore_checkpoint(path, template)
+    for (p, a), b in zip(jax.tree_util.tree_leaves_with_path(template),
+                         jax.tree_util.tree_leaves(restored)):
+        if tuple(np.shape(a)) != tuple(np.shape(b)):
+            raise ValueError(
+                f"checkpoint leaf {path_str(p)!r} has shape {np.shape(b)}, "
+                f"template expects {np.shape(a)} — wrong arch/optimizer/"
+                "precision for this checkpoint")
+    return restored

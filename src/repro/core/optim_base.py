@@ -127,13 +127,21 @@ class Optimizer:
 
 def _tree_update(rule: LayerwiseRule, lr, ctx: dict, grads: Pytree,
                  slots: dict[str, Pytree], params: Pytree,
-                 stacked_full: Pytree) -> tuple[Pytree, dict]:
-    """Per-leaf reference engine (pjit/sharded fallback)."""
+                 stacked_full: Pytree,
+                 master: Optional[Pytree] = None) -> tuple[Pytree, dict]:
+    """Per-leaf reference engine (pjit/sharded fallback).
 
-    def leaf(g, w, s: bool, *slot_leaves):
-        sl = dict(zip(rule.slots, slot_leaves))
+    ``master``: optional f32 weight pytree (the bf16 precision policy's
+    master copy). When given, the update reads/writes the master and the
+    returned params are the master cast down to each leaf's storage
+    dtype; the new master rides along in the slot dict.
+    """
+    n_rule = len(rule.slots)
+
+    def leaf(g, w, s: bool, *extra):
+        sl = dict(zip(rule.slots, extra[:n_rule]))
         gf = g.astype(jnp.float32)
-        wf = w.astype(jnp.float32)
+        wf = extra[n_rule] if master is not None else w.astype(jnp.float32)
         u, sl = rule.direction(ctx, gf, wf, sl)
         local_lr = lr
         if rule.trust is not None and not (
@@ -142,27 +150,42 @@ def _tree_update(rule: LayerwiseRule, lr, ctx: dict, grads: Pytree,
             ratio = rule.trust(ctx, w_norm, u_norm)
             local_lr = lr * tr.broadcast_ratio(ratio, wf, s)
         w_new, sl = rule.apply(ctx, wf, gf, u, local_lr, sl)
-        return (w_new.astype(w.dtype),) + tuple(sl[k] for k in rule.slots)
+        out = (w_new.astype(w.dtype),) + tuple(sl[k] for k in rule.slots)
+        if master is not None:
+            out += (w_new,)
+        return out
 
-    packs = tree_map(leaf, grads, params, stacked_full,
-                     *[slots[k] for k in rule.slots])
+    extras = [slots[k] for k in rule.slots]
+    if master is not None:
+        extras.append(master)
+    packs = tree_map(leaf, grads, params, stacked_full, *extras)
     is_tup = lambda t: isinstance(t, tuple)  # noqa: E731
     new_params = tree_map(lambda t: t[0], packs, is_leaf=is_tup)
     new_slots = {k: tree_map(lambda t, i=i + 1: t[i], packs, is_leaf=is_tup)
                  for i, k in enumerate(rule.slots)}
+    if master is not None:
+        new_slots[packing.MASTER_SLOT] = tree_map(
+            lambda t: t[n_rule + 1], packs, is_leaf=is_tup)
     return new_params, new_slots
 
 
 def _packed_update(rule: LayerwiseRule, layout: packing.PackedLayout, lr,
                    ctx: dict, grads: Pytree, slots: dict, params: Pytree,
-                   use_pallas: bool) -> tuple[Pytree, dict]:
+                   use_pallas: bool,
+                   master: Optional[jnp.ndarray] = None
+                   ) -> tuple[Pytree, dict]:
     """Flat-packed engine: whole-pytree buffers, per-slice scalars.
 
     ``use_pallas`` swaps the norms/apply passes for the rule's
     megakernels; the trust-ratio and adaptation-mask logic is computed
     here either way, so the two paths cannot drift.
+
+    ``master``: optional f32 master-weight superbuffer. When given, the
+    per-step params pack is skipped — the master IS the weight buffer —
+    and the updated master is returned in the slot dict; params come back
+    as the unpacked (storage-dtype) view of the new master.
     """
-    wbuf = packing.pack(layout, params)
+    wbuf = master if master is not None else packing.pack(layout, params)
     gbuf = packing.pack(layout, grads)
     u, slots = rule.direction(ctx, gbuf, wbuf, dict(slots))
     ratio = None
@@ -184,6 +207,8 @@ def _packed_update(rule: LayerwiseRule, layout: packing.PackedLayout, lr,
             else lr * packing.rows_expand(layout, ratio)
         wbuf2, new_slots = rule.apply(ctx, wbuf, gbuf, u, local_lr, slots)
     new_params = packing.unpack(layout, wbuf2)
+    if master is not None:
+        new_slots[packing.MASTER_SLOT] = wbuf2
     return new_params, new_slots
 
 
@@ -194,30 +219,37 @@ def make_optimizer(rule: LayerwiseRule, learning_rate: float | Schedule, *,
     individual optimizers supply ~20-line rules, not engines)."""
     lr_fn = as_schedule(learning_rate)
 
-    def init(params: Pytree, stacked: Optional[Pytree] = None) -> OptState:
+    def init(params: Pytree, stacked: Optional[Pytree] = None,
+             master: bool = False) -> OptState:
         step = jnp.zeros((), jnp.int32)
         if stacked is None:
-            return OptState(step=step, slots={
-                k: zeros_like_tree(params) for k in rule.slots})
+            slots = {k: zeros_like_tree(params) for k in rule.slots}
+            if master:
+                slots[packing.MASTER_SLOT] = tree_map(
+                    lambda p: p.astype(jnp.float32), params)
+            return OptState(step=step, slots=slots)
         layout = packing.build_layout(
             params, normalize_stacked(params, stacked))
         zeros = functools.partial(jnp.zeros, layout.buffer_shape,
                                   jnp.float32)
-        return OptState(step=step,
-                        slots={k: zeros() for k in rule.slots},
-                        layout=layout)
+        slots = {k: zeros() for k in rule.slots}
+        if master:
+            slots[packing.MASTER_SLOT] = packing.init_master(layout, params)
+        return OptState(step=step, slots=slots, layout=layout)
 
     def update(grads: Pytree, state: OptState, params: Pytree,
                stacked: Optional[Pytree] = None
                ) -> tuple[Pytree, OptState]:
         lr = lr_fn(state.step).astype(jnp.float32)
         ctx = rule.prepare(state.step) if rule.prepare is not None else {}
+        slots = dict(state.slots)
+        master = slots.pop(packing.MASTER_SLOT, None)
         if state.layout is not None:
             if stacked is not None:
                 packing.check_marker(state.layout, params, stacked)
             new_params, new_slots = _packed_update(
-                rule, state.layout, lr, ctx, grads, state.slots, params,
-                use_pallas)
+                rule, state.layout, lr, ctx, grads, slots, params,
+                use_pallas, master=master)
         else:
             if use_pallas:
                 raise ValueError(
@@ -227,7 +259,8 @@ def make_optimizer(rule: LayerwiseRule, learning_rate: float | Schedule, *,
                     "run the per-leaf jnp reference path only.")
             stacked_full = normalize_stacked(params, stacked)
             new_params, new_slots = _tree_update(
-                rule, lr, ctx, grads, state.slots, params, stacked_full)
+                rule, lr, ctx, grads, slots, params, stacked_full,
+                master=master)
         return new_params, OptState(step=state.step + 1, slots=new_slots,
                                     layout=state.layout)
 

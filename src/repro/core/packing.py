@@ -59,6 +59,13 @@ Pytree = Any
 LANE = 512        # superbuffer column count (multiple of the TPU lane 128)
 BLOCK_ROWS = 8    # sublane rows per kernel block; slices are block-aligned
 
+# Reserved OptState slot name for the f32 master-weight copy kept by the
+# bf16 precision policy. On the packed engine the master IS the (rows,
+# lane) superbuffer — the per-step params pack is skipped entirely and
+# the optimizer reads/writes the master, unpacking a low-precision view
+# for the next forward pass.
+MASTER_SLOT = "master"
+
 
 @dataclasses.dataclass(frozen=True)
 class Segment:
@@ -233,6 +240,16 @@ def pack(layout: PackedLayout, tree: Pytree) -> jnp.ndarray:
             flat = jnp.pad(flat, ((0, 0), (0, padded - seg.n)))
         parts.append(flat.reshape(seg.layers * seg.rows, layout.lane))
     return _replicate_in_mesh(jnp.concatenate(parts, axis=0))
+
+
+def init_master(layout: PackedLayout, params: Pytree) -> jnp.ndarray:
+    """f32 master-weight superbuffer seeded from the current params.
+
+    The segment table records the *storage* dtypes (bf16 under the bf16
+    precision policy), so ``unpack`` of an updated master round-trips the
+    low-precision params while the optimizer state keeps full precision.
+    """
+    return pack(layout, params)
 
 
 def unpack(layout: PackedLayout, buf: jnp.ndarray,

@@ -53,6 +53,31 @@ def cosine_decay(lr0: float, total_steps: int, lr_end: float = 0.0) -> Schedule:
     return fn
 
 
+def poly_decay_with_warmup(lr0: float, total_steps: int, warmup_steps: int,
+                           *, power: float = 2.0, lr_end: float = 0.0
+                           ) -> Schedule:
+    """You et al. (1708.03888 §6) large-batch recipe: linear warmup to
+    ``lr0`` over ``warmup_steps``, then polynomial decay over the
+    remaining ``total_steps - warmup_steps`` down to ``lr_end``."""
+    decay = polynomial_decay(lr0, max(total_steps - warmup_steps, 1),
+                             power, lr_end)
+    return with_warmup(decay, warmup_steps)
+
+
+def large_batch_lr(base_lr: float, base_batch: int, batch: int,
+                   total_steps: int, *, warmup_steps: int = 0,
+                   power: float = 2.0, policy: str = "linear") -> Schedule:
+    """The LARS paper's full LR recipe in one call: batch-size scaling of
+    a tuned ``(base_lr, base_batch)`` pair (linear per Goyal et al. /
+    sqrt per You et al.) combined with warmup + polynomial decay."""
+    from repro.core.scaling import scaled_lr
+    lr0 = scaled_lr(base_lr, base_batch, batch, policy)
+    if warmup_steps <= 0:
+        return polynomial_decay(lr0, total_steps, power)
+    return poly_decay_with_warmup(lr0, total_steps, warmup_steps,
+                                  power=power)
+
+
 def with_warmup(schedule: Schedule, warmup_steps: int) -> Schedule:
     """Linear warmup from 0 into ``schedule`` (offset so schedule sees t=0
     at the end of warmup). The §3.2 'learning rate warm-up' approach."""

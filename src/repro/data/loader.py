@@ -1,4 +1,4 @@
-"""Sharding-aware host loader.
+"""Sharding-aware host loader with double-buffered prefetch.
 
 ``ShardedLoader`` wraps a host-side numpy iterator and places each global
 batch onto the mesh with the requested PartitionSpec via
@@ -6,30 +6,127 @@ batch onto the mesh with the requested PartitionSpec via
 ``jax.device_put`` with a NamedSharding). This is the production path —
 each host feeds only its addressable shard; on the CPU container it
 degenerates to a plain device_put.
+
+By default the batch generation AND device placement run ahead of the
+consumer on a background thread (:class:`Prefetcher`, bounded queue of
+``prefetch`` batches) so the host never sits on the accelerator's
+critical path: while step ``i`` executes, batch ``i+1`` is already on
+device and batch ``i+2`` is being assembled.
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Iterator
+import queue
+import threading
+from typing import Any, Callable, Iterator, Optional
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
-class ShardedLoader:
-    def __init__(self, it: Iterator[Any], mesh: Mesh,
-                 spec: P | dict[str, P]):
-        self._it = it
-        self.mesh = mesh
-        self.spec = spec
+class Prefetcher:
+    """Run an iterator (plus an optional transform, e.g. device
+    placement) on a daemon thread, ``buffer_size`` items ahead.
+
+    The queue bound is the double-buffering depth: the thread blocks on
+    ``put`` once it is that far ahead, so host memory stays bounded.
+    Exceptions in the source iterator are re-raised at the consuming
+    ``next()`` call; an exhausted source raises ``StopIteration`` as
+    usual. The thread is a daemon — abandoning the iterator mid-stream
+    (infinite epoch-cycling sources) cannot hang interpreter exit.
+    """
+
+    _DONE = object()
+
+    def __init__(self, it: Iterator[Any],
+                 transform: Optional[Callable[[Any], Any]] = None,
+                 buffer_size: int = 2):
+        if buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1, got {buffer_size}")
+        self._q: queue.Queue = queue.Queue(maxsize=buffer_size)
+        self._err: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._finished = False
+
+        def run():
+            try:
+                for item in it:
+                    out = transform(item) if transform is not None else item
+                    while not self._stop.is_set():
+                        try:
+                            self._q.put(out, timeout=0.1)
+                            break
+                        except queue.Full:
+                            continue
+                    if self._stop.is_set():
+                        break
+            except BaseException as e:  # surfaced at the consumer's next()
+                self._err = e
+            # best effort: the consumer may already have stopped draining,
+            # so never block here — __next__ also detects a dead producer
+            try:
+                self._q.put_nowait(self._DONE)
+            except queue.Full:
+                pass
+
+        self._thread = threading.Thread(
+            target=run, name="repro-prefetch", daemon=True)
+        self._thread.start()
 
     def __iter__(self):
         return self
 
     def __next__(self):
-        batch = next(self._it)
-        return place(batch, self.mesh, self.spec)
+        if self._finished:          # iterator protocol: stay exhausted
+            raise StopIteration
+        while True:
+            try:
+                item = self._q.get(timeout=0.1)
+                break
+            except queue.Empty:
+                if not self._thread.is_alive():
+                    # producer died without managing to post the sentinel
+                    item = self._DONE
+                    break
+        if item is self._DONE:
+            self._finished = True
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        """Stop the producer thread; subsequent ``next()`` drains what is
+        already buffered, then raises ``StopIteration``. Joins briefly so
+        an in-flight device placement finishes before interpreter
+        teardown (a daemon thread dying inside XLA aborts the process)."""
+        self._stop.set()
+        self._thread.join(timeout=10.0)
+
+
+class ShardedLoader:
+    def __init__(self, it: Iterator[Any], mesh: Mesh,
+                 spec: P | dict[str, P], *, prefetch: int = 2):
+        self.mesh = mesh
+        self.spec = spec
+        place_fn = lambda b: place(b, mesh, spec)  # noqa: E731
+        if prefetch:
+            self._it: Iterator[Any] = Prefetcher(
+                iter(it), transform=place_fn, buffer_size=prefetch)
+        else:
+            self._it = (place_fn(b) for b in it)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return next(self._it)
+
+    def close(self) -> None:
+        close = getattr(self._it, "close", None)
+        if close is not None:
+            close()
 
 
 def place(batch, mesh: Mesh, spec):

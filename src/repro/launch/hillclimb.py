@@ -14,20 +14,8 @@ import json       # noqa: E402
 
 from repro.launch.dryrun import lower_pair       # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.overrides import parse_overrides, parse_val  # noqa: E402,F401
 from repro.launch import roofline as RL          # noqa: E402
-
-
-def parse_val(v: str):
-    if v.lower() in ("true", "false"):
-        return v.lower() == "true"
-    try:
-        return int(v)
-    except ValueError:
-        pass
-    try:
-        return float(v)
-    except ValueError:
-        return v
 
 
 def main() -> None:
@@ -44,10 +32,7 @@ def main() -> None:
     ap.add_argument("--out", default=None, help="append JSONL here")
     args = ap.parse_args()
 
-    overrides = {}
-    for s in args.set:
-        k, v = s.split("=", 1)
-        overrides[k] = parse_val(v)
+    overrides = parse_overrides(args.set)
 
     mesh = make_production_mesh()
     rows = []

@@ -1,11 +1,15 @@
 """Training entry point: ``--arch`` selects any registered config; runs a
-real (CPU-scale or TPU) training job with the LARS/LAMB/SGD optimizers.
+real (CPU-scale or TPU) training job through the large-batch
+:class:`~repro.train.pipeline.TrainPipeline` — microbatched gradient
+accumulation, bf16/f32 precision policy, and a donated mesh-aware step
+fed by the double-buffered :class:`~repro.data.ShardedLoader`.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
       --reduced --steps 50 --batch 32 --seq 64 --optimizer lars
   PYTHONPATH=src python -m repro.launch.train --arch lenet-mnist \
-      --steps 200 --batch 512 --optimizer lars --lr 0.02
+      --steps 200 --batch 4096 --accum-steps 8 --precision bf16 \
+      --optimizer lars --lr 0.02 --warmup 20 --lr-policy linear
 """
 
 from __future__ import annotations
@@ -14,30 +18,62 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import restore_train_state, save_train_state
 from repro.configs import ARCHS, get_config
 from repro.core import get_optimizer, schedules
-from repro.data import TokenTaskConfig, batch_iterator, synthetic_mnist, \
-    token_batches
+from repro.core.scaling import scaled_lr
+from repro.data import (ShardedLoader, TokenTaskConfig, batch_iterator,
+                        synthetic_mnist, token_batches)
+from repro.distributed.sharding import batch_pspecs
+from repro.launch.overrides import apply_overrides
 from repro.models import build_model
-from repro.train import (create_train_state, make_eval_step, make_train_step,
-                         train_loop)
+from repro.train import TrainPipeline, make_eval_step, train_loop
 
 
 def lm_batches(cfg, batch: int, seq: int, seed: int = 0):
+    """Host-side numpy batches (device placement is the loader's job)."""
     task = TokenTaskConfig(vocab_size=min(cfg.vocab_size, 512), seed=seed)
     for toks in token_batches(task, batch=batch, seq_len=seq, seed=seed):
-        b = {"tokens": jnp.asarray(toks[:, :seq])}
+        b = {"tokens": np.asarray(toks[:, :seq], np.int32)}
         if cfg.family == "encdec":
-            b["frames"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model),
-                                    jnp.float32)
+            b["frames"] = np.zeros((batch, cfg.encoder_seq, cfg.d_model),
+                                   np.float32)
         if cfg.family == "vlm":
-            b["image_embeddings"] = jnp.zeros(
-                (batch, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+            b["image_embeddings"] = np.zeros(
+                (batch, cfg.num_image_tokens, cfg.d_model), np.float32)
         yield b
+
+
+def make_mesh(spec: str):
+    """``auto`` -> all local devices on the data axis; ``DxM`` -> an
+    explicit (data, model) mesh over the leading D*M devices."""
+    devs = jax.devices()
+    if spec == "auto":
+        return jax.make_mesh((len(devs), 1), ("data", "model"))
+    try:
+        data, model = (int(s) for s in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh expects 'auto' or 'DATAxMODEL', "
+                         f"got {spec!r}")
+    if data * model > len(devs):
+        raise SystemExit(f"--mesh {spec} needs {data * model} devices, "
+                         f"have {len(devs)}")
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=devs[:data * model])
+
+
+def make_lr_schedule(args) -> schedules.Schedule:
+    """Paper recipe: batch-size scaling of (--lr, --base-batch), then
+    either warmup + polynomial decay (--warmup > 0, You et al. — the
+    packaged ``schedules.large_batch_lr`` recipe) or a flat scaled LR."""
+    if args.warmup > 0:
+        return schedules.large_batch_lr(
+            args.lr, args.base_batch, args.batch, total_steps=args.steps,
+            warmup_steps=args.warmup, policy=args.lr_policy)
+    return schedules.constant(
+        scaled_lr(args.lr, args.base_batch, args.batch, args.lr_policy))
 
 
 def main() -> None:
@@ -48,73 +84,96 @@ def main() -> None:
     ap.add_argument("--optimizer", default="lars",
                     choices=("lars", "lamb", "sgd", "adamw"))
     ap.add_argument("--lr", type=float, default=0.01)
-    ap.add_argument("--warmup", type=int, default=0)
+    ap.add_argument("--lr-policy", default="none",
+                    choices=("none", "linear", "sqrt"),
+                    help="batch-size LR scaling from (--lr, --base-batch)")
+    ap.add_argument("--base-batch", type=int, default=32)
+    ap.add_argument("--warmup", type=int, default=0,
+                    help="warmup steps; >0 switches to the You et al. "
+                    "warmup + polynomial-decay schedule")
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=32,
+                    help="GLOBAL batch size (split into --accum-steps "
+                    "microbatches)")
+    ap.add_argument("--accum-steps", type=int, default=1,
+                    help="microbatches accumulated per optimizer update")
+    ap.add_argument("--precision", default="f32", choices=("f32", "bf16"),
+                    help="bf16: bf16 compute + f32 master weights")
+    ap.add_argument("--mesh", default="auto",
+                    help="'auto' (all devices on data) or DATAxMODEL, "
+                    "e.g. 4x2")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
-    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--checkpoint", default=None,
+                    help="save the FULL TrainState here when done")
+    ap.add_argument("--resume", default=None,
+                    help="restore a TrainState checkpoint before training")
     ap.add_argument("--set", action="append", default=[],
                     metavar="FIELD=VALUE",
                     help="config override, e.g. --set remat_block=8")
     args = ap.parse_args()
 
+    if args.batch % args.accum_steps:
+        raise SystemExit(f"--batch {args.batch} must be divisible by "
+                         f"--accum-steps {args.accum_steps}")
+
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    if args.set:
-        import dataclasses
-
-        def parse_val(v):   # (not hillclimb's — importing it would set
-            if v.lower() in ("true", "false"):   # the 512-device flag)
-                return v.lower() == "true"
-            for t in (int, float):
-                try:
-                    return t(v)
-                except ValueError:
-                    pass
-            return v
-
-        cfg = dataclasses.replace(
-            cfg, **{k: parse_val(v) for k, v in
-                    (s.split("=", 1) for s in args.set)})
+    cfg = apply_overrides(cfg, args.set)
     model = build_model(cfg)
+    mesh = make_mesh(args.mesh)
 
-    lr = schedules.with_warmup(schedules.constant(args.lr), args.warmup)
-    opt = get_optimizer(args.optimizer, learning_rate=lr)
-    state = create_train_state(model, opt, jax.random.key(args.seed))
+    opt = get_optimizer(args.optimizer, learning_rate=make_lr_schedule(args))
+    pipeline = TrainPipeline(model, opt, cfg,
+                             accum_steps=args.accum_steps,
+                             precision=args.precision, mesh=mesh)
+    state = pipeline.init_state(jax.random.key(args.seed))
+    if args.resume:
+        state = pipeline.place_state(
+            restore_train_state(args.resume, state))
+        print(f"resumed from {args.resume} "
+              f"at step {int(state.opt_state.step)}")
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(state.params))
+    micro = args.batch // args.accum_steps
     print(f"arch={cfg.name} family={cfg.family} params={n_params:,} "
-          f"opt={opt.name} lr={args.lr}")
+          f"opt={opt.name} lr={args.lr} mesh={dict(mesh.shape)} "
+          f"global_batch={args.batch} micro_batch={micro} "
+          f"accum={args.accum_steps} precision={args.precision}")
 
+    bspecs = batch_pspecs(cfg, mesh, batch=args.batch)
     if cfg.family == "cnn":
-        x_tr, y_tr, x_te, y_te = synthetic_mnist()
-        batches = ({"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
-                   for b in batch_iterator(x_tr, y_tr, batch=args.batch,
-                                           seed=args.seed))
-        eval_batches = [{"x": jnp.asarray(x_te[i:i + 256]),
-                         "y": jnp.asarray(y_te[i:i + 256])}
+        # size the procedural dataset to the global batch —
+        # batch_iterator's epoch wrap can only cover a shortfall of one
+        # dataset, and a silently smaller batch would train with an LR
+        # scaled for the REQUESTED batch
+        x_tr, y_tr, x_te, y_te = synthetic_mnist(max(8192, args.batch))
+        host_batches = batch_iterator(x_tr, y_tr, batch=args.batch,
+                                      seed=args.seed)
+        eval_batches = [{"x": x_te[i:i + 256], "y": y_te[i:i + 256]}
                         for i in range(0, len(x_te), 256)]
     else:
-        batches = lm_batches(cfg, args.batch, args.seq, args.seed)
+        host_batches = lm_batches(cfg, args.batch, args.seq, args.seed)
         eval_batches = None
+    batches = ShardedLoader(host_batches, mesh, bspecs)
 
-    step = make_train_step(model, opt, cfg)
     t0 = time.perf_counter()
-    state, hist = train_loop(step, state, batches, args.steps,
+    state, hist = train_loop(pipeline, state, batches, args.steps,
                              log_every=args.log_every,
                              eval_fn=make_eval_step(model, cfg)
                              if eval_batches else None,
                              eval_batches=eval_batches)
     dt = time.perf_counter() - t0
+    batches.close()
     print(f"done: {args.steps} steps in {dt:.1f}s "
-          f"({args.steps / dt:.2f} steps/s)")
+          f"({args.steps / dt:.2f} steps/s, "
+          f"{args.steps * args.batch / dt:.0f} examples/s)")
     if hist and "eval_accuracy" in hist[-1]:
         print(f"eval accuracy: {hist[-1]['eval_accuracy']:.4f}")
     if args.checkpoint:
-        save_checkpoint(args.checkpoint, state.params)
-        print(f"checkpoint -> {args.checkpoint}")
+        save_train_state(args.checkpoint, state)
+        print(f"full TrainState checkpoint -> {args.checkpoint}")
 
 
 if __name__ == "__main__":

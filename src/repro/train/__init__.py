@@ -10,3 +10,5 @@ from repro.train.metrics import accuracy, generalization_error  # noqa: F401
 from repro.train.step import (make_train_step, make_eval_step,  # noqa: F401
                               make_lm_train_step, make_lm_eval_step)
 from repro.train.loop import train_loop  # noqa: F401
+from repro.train.pipeline import (TrainPipeline, Precision,  # noqa: F401
+                                  PRECISIONS, get_precision)

@@ -15,8 +15,13 @@ def train_loop(step_fn: Callable, state, batches: Iterator,
                eval_fn: Optional[Callable] = None,
                eval_batches: Optional[list] = None,
                jit: bool = True) -> tuple[Any, list[dict]]:
-    """Run ``num_steps`` steps. Returns (final state, history)."""
-    if jit:
+    """Run ``num_steps`` steps. Returns (final state, history).
+
+    ``step_fn`` may be a plain (state, batch) function (jitted here) or
+    an already-compiled callable such as :class:`~repro.train.pipeline.
+    TrainPipeline` (marked by ``already_jitted``), which is used as-is.
+    """
+    if jit and not getattr(step_fn, "already_jitted", False):
         step_fn = jax.jit(step_fn)
     history: list[dict] = []
     t0 = time.perf_counter()

@@ -1,0 +1,266 @@
+"""Large-batch execution pipeline: microbatched gradient accumulation,
+bf16/f32 precision policy, and a donated mesh-aware train step.
+
+The paper's point is scaling the *global* batch without losing accuracy
+(LARS); You et al. (1708.03888, 1904.00962) only reach 16K-32K batches
+through gradient accumulation + LR scaling/warmup + mixed precision.
+:class:`TrainPipeline` is that execution layer for this repro:
+
+* **Accumulation** — the global batch ``(B, ...)`` is reshaped to
+  ``(accum_steps, B/accum_steps, ...)`` and scanned with ``lax.scan``
+  inside ONE jitted step. Per-microbatch gradients accumulate into an
+  f32 buffer; the optimizer update — and hence the LARS trust ratio —
+  runs exactly once per global batch on the mean gradient, so the
+  layer-wise semantics match a single step on the full batch. With
+  ``accum_steps=1`` the scan is elided entirely and the traced step is
+  op-for-op :func:`repro.train.step.make_train_step` (bit-identical
+  trajectories under f32 — pinned by test).
+* **Precision policy** — ``"f32"`` leaves every dtype alone; ``"bf16"``
+  stores params and runs forward/backward in bfloat16 while the
+  optimizer keeps f32 master weights in the flat-packed superbuffer
+  (:data:`repro.core.packing.MASTER_SLOT`) and accumulates gradients in
+  f32. Batch float leaves are cast to the compute dtype inside the step.
+* **Mesh awareness** — given a mesh, the step is jitted with explicit
+  in/out shardings from :mod:`repro.distributed.sharding` and
+  ``donate_argnums=(0,)`` so the TrainState is updated in place
+  (params + slots never double-buffer). Tracing happens under
+  ``with mesh:`` — required by the packed substrate's replication
+  constraint (see ``packing._replicate_in_mesh``).
+
+Typical use::
+
+    pipe = TrainPipeline(model, opt, cfg, accum_steps=8, precision="bf16",
+                         mesh=mesh)
+    state = pipe.init_state(jax.random.key(0))
+    for batch in ShardedLoader(host_batches, mesh, pipe.batch_specs(B)):
+        state, metrics = pipe(state, batch)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.state import TrainState
+from repro.train.step import _forward_and_loss
+
+Pytree = Any
+tree_map = jax.tree_util.tree_map
+
+
+# ------------------------------------------------------------- precision
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """Dtype policy for one training run.
+
+    ``compute_dtype`` is what params, activations and batch floats run
+    in (``None`` = leave the model's own dtypes untouched).
+    ``master_weights`` keeps an f32 master copy of the params as an
+    optimizer slot (the packed engine stores it as the superbuffer and
+    skips the per-step params pack entirely).
+    """
+
+    name: str
+    compute_dtype: Optional[Any]
+    master_weights: bool
+
+
+PRECISIONS: dict[str, Precision] = {
+    "f32": Precision("f32", None, False),
+    "bf16": Precision("bf16", jnp.bfloat16, True),
+}
+
+
+def get_precision(precision: str | Precision) -> Precision:
+    if isinstance(precision, Precision):
+        return precision
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; "
+                         f"have {sorted(PRECISIONS)}")
+    return PRECISIONS[precision]
+
+
+def cast_floats(tree: Pytree, dtype) -> Pytree:
+    """Cast float leaves to ``dtype``; int/bool leaves pass through."""
+    if dtype is None:
+        return tree
+    return tree_map(
+        lambda x: x.astype(dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+# -------------------------------------------------------------- pipeline
+
+class TrainPipeline:
+    """End-to-end jitted train step: accumulate, update once, donate.
+
+    The pipeline compiles lazily on the first call (the global batch
+    size is read off the first batch, which fixes the batch shardings),
+    then reuses the compiled step. ``already_jitted`` tells
+    :func:`repro.train.loop.train_loop` not to wrap it again.
+    """
+
+    already_jitted = True
+
+    def __init__(self, model, optimizer, cfg=None, *, accum_steps: int = 1,
+                 precision: str | Precision = "f32", mesh=None,
+                 donate: bool = True, packed: bool = True):
+        if accum_steps < 1:
+            raise ValueError(f"accum_steps must be >= 1, got {accum_steps}")
+        self.model = model
+        self.optimizer = optimizer
+        self.cfg = cfg if cfg is not None else model.cfg
+        self.accum_steps = accum_steps
+        self.precision = get_precision(precision)
+        self.mesh = mesh
+        self.donate = donate
+        self.packed = packed
+        # stacked marker from an eval_shape trace: never allocates params
+        shapes = jax.eval_shape(model.init, jax.random.key(0))
+        marker_fn = getattr(model, "stacked_marker", None)
+        self._stacked = (marker_fn(shapes)
+                         if packed and marker_fn is not None else None)
+        self._compiled: Optional[Callable] = None
+        self._step_fn = self._build_step()
+
+    # ------------------------------------------------------------- state
+
+    def init_state(self, key) -> TrainState:
+        """Fresh TrainState on this pipeline's precision policy (+ mesh
+        placement when mesh-aware): params in the compute dtype, f32
+        master weights as an optimizer slot when the policy keeps one."""
+        params = self.model.init(key)
+        params = cast_floats(params, self.precision.compute_dtype)
+        opt_state = self.optimizer.init(
+            params, stacked=self._stacked,
+            master=self.precision.master_weights)
+        state = TrainState(params=params, opt_state=opt_state)
+        return self.place_state(state)
+
+    def place_state(self, state: TrainState) -> TrainState:
+        """Device-put a (possibly host/restored) state onto the mesh."""
+        if self.mesh is None:
+            return state
+        from repro.distributed.sharding import state_pspecs, tree_named
+        specs = state_pspecs(self.cfg, jax.eval_shape(lambda: state),
+                             self.mesh)
+        return jax.device_put(state, tree_named(self.mesh, specs))
+
+    def batch_specs(self, global_batch: int):
+        """PartitionSpecs a host loader should place batches with."""
+        from repro.distributed.sharding import batch_pspecs
+        if self.mesh is None:
+            raise ValueError("batch_specs requires a mesh-aware pipeline")
+        return batch_pspecs(self.cfg, self.mesh, batch=global_batch)
+
+    # -------------------------------------------------------------- step
+
+    def _build_step(self) -> Callable:
+        model, cfg = self.model, self.cfg
+        optimizer, stacked = self.optimizer, self._stacked
+        k = self.accum_steps
+        compute_dtype = self.precision.compute_dtype
+
+        def step(state: TrainState, batch) -> tuple[TrainState, dict]:
+            batch = cast_floats(batch, compute_dtype)
+
+            def loss_fn(params, mb):
+                return _forward_and_loss(model, cfg, params, mb)
+
+            grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+            if k == 1:
+                # exactly make_train_step's body: bit-identical under f32
+                (loss, (_, aux)), grads = grad_fn(state.params, batch)
+                aux_loss = aux.get("aux_loss", jnp.zeros((), jnp.float32))
+            else:
+                micro = tree_map(
+                    lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                    batch)
+
+                def body(carry, mb):
+                    gsum, lsum, asum = carry
+                    (loss, (_, aux)), g = grad_fn(state.params, mb)
+                    gsum = tree_map(
+                        lambda a, gi: a + gi.astype(jnp.float32), gsum, g)
+                    asum = asum + aux.get("aux_loss",
+                                          jnp.zeros((), jnp.float32))
+                    return (gsum, lsum + loss, asum), None
+
+                zeros = tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+                carry0 = (zeros, jnp.zeros((), jnp.float32),
+                          jnp.zeros((), jnp.float32))
+                (gsum, lsum, asum), _ = jax.lax.scan(body, carry0, micro)
+                # equal-size microbatches + mean losses: the mean of the
+                # per-microbatch mean gradients IS the full-batch mean
+                # gradient, so the (single) LARS trust ratio matches a
+                # one-shot step on the whole global batch.
+                inv = 1.0 / k
+                grads = tree_map(lambda g: g * inv, gsum)
+                loss, aux_loss = lsum * inv, asum * inv
+
+            new_params, new_opt = optimizer.update(
+                grads, state.opt_state, state.params, stacked=stacked)
+            metrics = {"loss": loss, "aux_loss": aux_loss,
+                       "step": new_opt.step}
+            return TrainState(new_params, new_opt), metrics
+
+        return step
+
+    def _jit(self, state: TrainState, batch):
+        """The raw ``jax.jit``-wrapped step (shardings + donation)."""
+        donate = (0,) if self.donate else ()
+        if self.mesh is None:
+            return jax.jit(self._step_fn, donate_argnums=donate)
+        from repro.distributed.sharding import (batch_pspecs, state_pspecs,
+                                                tree_named)
+        leaves = jax.tree_util.tree_leaves(batch)
+        global_batch = leaves[0].shape[0]
+        sspecs = state_pspecs(self.cfg, jax.eval_shape(lambda: state),
+                              self.mesh)
+        bspecs = batch_pspecs(self.cfg, self.mesh, batch=global_batch)
+        sshard = tree_named(self.mesh, sspecs)
+        return jax.jit(self._step_fn,
+                       in_shardings=(sshard, tree_named(self.mesh, bspecs)),
+                       out_shardings=(sshard, None),
+                       donate_argnums=donate)
+
+    def _compile(self, state: TrainState, batch) -> Callable:
+        fn = self._jit(state, batch)
+        if self.mesh is None:
+            return fn
+        mesh = self.mesh
+
+        def call(s, b):
+            # trace/execute under the ambient mesh: the packed substrate
+            # pins its superbuffers replicated only when it can see one
+            with mesh:
+                return fn(s, b)
+
+        return call
+
+    def lower(self, state: TrainState, batch):
+        """``jax.stages.Lowered`` for this step — compile-time
+        introspection (``.compile().memory_analysis()`` drives the
+        peak-memory deltas reported by ``benchmarks/paper_sweep.py``)."""
+        fn = self._jit(state, batch)
+        if self.mesh is not None:
+            with self.mesh:
+                return fn.lower(state, batch)
+        return fn.lower(state, batch)
+
+    def __call__(self, state: TrainState, batch) -> tuple[TrainState, dict]:
+        if self.accum_steps > 1:
+            b = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            if b % self.accum_steps:
+                raise ValueError(
+                    f"global batch {b} not divisible by "
+                    f"accum_steps={self.accum_steps}")
+        if self._compiled is None:
+            self._compiled = self._compile(state, batch)
+        return self._compiled(state, batch)

@@ -31,11 +31,18 @@ class TrainState(NamedTuple):
     opt_state: OptState
 
 
-def create_train_state(model, optimizer, key, *,
-                       packed: bool = True) -> TrainState:
-    params = model.init(key)
+def create_train_state(model, optimizer, key, *, packed: bool = True,
+                       precision: str = "f32") -> TrainState:
+    """Fresh TrainState; ``precision="bf16"`` stores params in bfloat16
+    and seeds an f32 master-weight slot in the optimizer state (packed:
+    the superbuffer itself) — the same policy `TrainPipeline` applies."""
+    from repro.train.pipeline import cast_floats, get_precision
+    policy = get_precision(precision)
+    params = cast_floats(model.init(key), policy.compute_dtype)
     marker_fn = getattr(model, "stacked_marker", None)
     stacked = (marker_fn(params)
                if packed and marker_fn is not None else None)
     return TrainState(params=params,
-                      opt_state=optimizer.init(params, stacked=stacked))
+                      opt_state=optimizer.init(
+                          params, stacked=stacked,
+                          master=policy.master_weights))

@@ -19,6 +19,7 @@ consistency check against the init-time layout.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Callable, Optional
 
@@ -96,11 +97,40 @@ def make_train_step(model, optimizer, cfg=None) -> Callable:
     return step
 
 
+def _param_float_dtype(params):
+    for leaf in jax.tree_util.tree_leaves(params):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            return jnp.asarray(leaf).dtype
+    return jnp.float32
+
+
 def make_eval_step(model, cfg=None) -> Callable:
-    """(params, batch) -> metrics {loss, accuracy}."""
+    """(params, batch) -> metrics {loss, accuracy}.
+
+    Accuracy alignment (pinned by tests/test_models.py): the model's
+    logit at sequence position t predicts the token at position t+1, so
+    ``logits[:, :-1]`` is scored against ``tokens[:, 1:]``. For the VLM
+    family ``_forward_and_loss`` already slices the bidirectional image
+    prefix off the logits, which re-aligns them with the text tokens —
+    the SAME next-token shift then applies (prefix length must not be
+    shifted into the targets). The CNN family scores the class head
+    directly against labels.
+    """
     cfg = cfg if cfg is not None else model.cfg
+    # Eval must materialize logits even for configs whose TRAIN loss runs
+    # the memory-saving chunked path (which returns hidden states only —
+    # accuracy over `None` logits was a crash, not a metric).
+    if getattr(cfg, "loss_chunk", 0):
+        cfg = dataclasses.replace(cfg, loss_chunk=0)
 
     def step(params, batch) -> dict:
+        # match batch floats to the param compute dtype so evaluating a
+        # bf16-policy state with f32 host data works (lax.conv and
+        # friends require matching element types)
+        dt = _param_float_dtype(params)
+        batch = {k: v.astype(dt)
+                 if jnp.issubdtype(jnp.asarray(v).dtype, jnp.floating)
+                 else v for k, v in batch.items()}
         loss, (logits, _) = _forward_and_loss(model, cfg, params, batch)
         if cfg.family == "cnn":
             acc = accuracy(logits, batch["y"])

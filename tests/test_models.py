@@ -229,6 +229,88 @@ def test_attention_q_chunk_invariance():
                                rtol=1e-5, atol=1e-5)
 
 
+# --------------------------------------------------- eval-step alignment
+
+# one representative reduced arch per family
+_EVAL_FAMILY_ARCHS = {"dense": "smollm-135m", "vlm": "paligemma-3b",
+                      "encdec": "whisper-base"}
+
+
+@pytest.mark.parametrize("family,arch", sorted(_EVAL_FAMILY_ARCHS.items()))
+def test_eval_step_accuracy_alignment(family, arch):
+    """Pin make_eval_step's accuracy alignment per family: the logit at
+    position t scores the token at t+1; for the VLM family the image
+    prefix is sliced off the logits FIRST (so the prefix length never
+    shifts into the targets), then the same next-token shift applies."""
+    from repro.train import make_eval_step
+    from repro.train.metrics import accuracy
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(20))
+    batch = _batch(cfg, seed=21)
+    m = make_eval_step(model, cfg)(params, batch)
+
+    full_logits, _ = model.forward(params, batch["tokens"],
+                                   **_fwd_kwargs(cfg, batch))
+    n_img = cfg.num_image_tokens if cfg.family == "vlm" else 0
+    # reference alignment built from the FULL (prefix-inclusive) logits:
+    # predictions for tokens[:, 1:] live at full positions
+    # [n_img, n_img + S - 1)
+    expected = accuracy(full_logits[:, n_img:-1], batch["tokens"][:, 1:])
+    np.testing.assert_allclose(float(m["accuracy"]), float(expected),
+                               rtol=1e-6)
+    assert bool(jnp.isfinite(m["loss"]))
+
+
+def test_eval_step_cnn_scores_class_head():
+    from repro.train import make_eval_step
+    cfg = get_config("lenet-mnist")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(22))
+    rng = np.random.default_rng(23)
+    x = jnp.asarray(rng.random((16, 28, 28, 1)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, 16), jnp.int32)
+    m = make_eval_step(model, cfg)(params, {"x": x, "y": y})
+    logits, _ = model.forward(params, x)
+    expected = float(np.mean(np.argmax(np.asarray(logits), -1)
+                             == np.asarray(y)))
+    np.testing.assert_allclose(float(m["accuracy"]), expected, rtol=1e-6)
+
+
+def test_eval_step_materializes_logits_for_chunked_loss_configs():
+    """A config whose TRAIN loss runs the chunked (hidden-only) path must
+    still produce real logits — and the identical accuracy — in eval."""
+    from repro.train import make_eval_step
+    cfg = get_config("smollm-135m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(24))
+    batch = _batch(cfg, seed=25)
+    ref = make_eval_step(model, cfg)(params, batch)
+    chunked_cfg = dataclasses.replace(cfg, loss_chunk=4)
+    m = make_eval_step(build_model(chunked_cfg), chunked_cfg)(params, batch)
+    np.testing.assert_allclose(float(m["accuracy"]), float(ref["accuracy"]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(m["loss"]), float(ref["loss"]),
+                               rtol=1e-5)
+
+
+def test_eval_step_casts_batch_to_bf16_params():
+    """Evaluating a bf16-precision state with f32 host batches must cast
+    rather than crash (lax.conv requires matching element types)."""
+    from repro.train import make_eval_step
+    cfg = get_config("lenet-mnist")
+    model = build_model(cfg)
+    params = jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.bfloat16), model.init(jax.random.key(26)))
+    rng = np.random.default_rng(27)
+    m = make_eval_step(model, cfg)(
+        params, {"x": jnp.asarray(rng.random((8, 28, 28, 1)), jnp.float32),
+                 "y": jnp.asarray(rng.integers(0, 10, 8), jnp.int32)})
+    assert bool(jnp.isfinite(m["loss"]))
+    assert 0.0 <= float(m["accuracy"]) <= 1.0
+
+
 def test_lenet_train_step():
     cfg = get_config("lenet-mnist")
     model = build_model(cfg)
