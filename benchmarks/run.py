@@ -5,6 +5,7 @@ plus the framework-level benches.
                     the full sweep is `python -m benchmarks.paper_sweep`)
   optimizer_bench   optimizer step overhead (paper §6 challenges analogue)
   kernel_bench      Pallas kernels vs jnp oracles
+  serve_bench       continuous-batching vs static-batch decode throughput
   roofline_table    §Roofline from recorded dry-run JSONL
 
 `python -m benchmarks.run` runs the quick version of everything.
@@ -38,6 +39,14 @@ def main() -> None:
     sys.argv = ["kernel_bench", "--quick"]
     from benchmarks import kernel_bench
     kernel_bench.main()
+
+    print()
+    print("=" * 72)
+    print("== serve_bench (quick) — continuous vs static batching")
+    print("=" * 72)
+    sys.argv = ["serve_bench", "--quick"]
+    from benchmarks import serve_bench
+    serve_bench.main()
 
     print()
     print("=" * 72)

@@ -1,0 +1,143 @@
+"""Serving benchmark: continuous batching vs static-batch decode.
+
+The workload is a heterogeneous request mix (prompt and output lengths
+drawn from ranges): the static DecodeEngine pads every sequence to the
+longest output in its batch — lanes idle once their request finishes —
+while the ServeEngine admits queued requests into freed slots
+mid-flight. Reported per cache capacity:
+
+  * useful tok/s (only requested tokens count, for both engines);
+  * slot occupancy (mean fraction of lanes doing useful work per step);
+  * decode trace count (the one-jitted-call-per-token contract).
+
+Usage: PYTHONPATH=src python -m benchmarks.serve_bench [--quick]
+       [--arch qwen3-14b] [--out BENCH_serve.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import DecodeEngine, ServeEngine
+
+
+def make_requests(cfg, n, rng, *, prompt_rng=(4, 20), new_rng=(4, 40)):
+    return [(rng.integers(0, cfg.vocab_size,
+                          (int(rng.integers(*prompt_rng)),)),
+             int(rng.integers(*new_rng)))
+            for _ in range(n)]
+
+
+def bench_static(model, params, cfg, requests, slots, capacity,
+                 *, warmup: bool = True) -> dict:
+    """Static batching: fixed batches of ``slots`` sequences, padded to
+    the batch max prompt, decoded to the batch max output length."""
+    engine = DecodeEngine(model, params, cfg)
+    if warmup:   # compile the prefill/decode shapes out of the timing
+        _run_static(engine, requests, slots, capacity)
+    return _run_static(engine, requests, slots, capacity)
+
+
+def _run_static(engine, requests, slots, capacity) -> dict:
+    useful = 0
+    lane_steps = busy_steps = 0
+    t0 = time.perf_counter()
+    for i in range(0, len(requests), slots):
+        chunk = requests[i:i + slots]
+        max_p = max(p.size for p, _ in chunk)
+        max_n = max(n for _, n in chunk)
+        toks = np.zeros((len(chunk), max_p), np.int32)
+        for j, (p, _) in enumerate(chunk):
+            # static batch has no per-row lengths: left-pad so every
+            # prompt ends at the same position (standard workaround)
+            toks[j, max_p - p.size:] = p
+        out = engine.generate({"tokens": jax.numpy.asarray(toks)},
+                              max_new_tokens=max_n, cache_len=capacity)
+        out.block_until_ready()
+        useful += sum(n for _, n in chunk)
+        lane_steps += len(chunk) * max_n
+        busy_steps += sum(n for _, n in chunk)
+    wall = time.perf_counter() - t0
+    return {"tok_per_s": useful / wall, "wall_s": wall,
+            "occupancy": busy_steps / lane_steps, "tokens": useful}
+
+
+def bench_continuous(model, params, cfg, requests, slots, capacity,
+                     *, warmup: bool = True) -> dict:
+    engine = ServeEngine(model, params, cfg, slots=slots,
+                         capacity=capacity, prefill_bucket=8)
+    if warmup:   # compile decode + the admit shape buckets, then reset
+        engine.run(requests)
+        engine.reset_stats()
+    t0 = time.perf_counter()
+    finished = engine.run(requests)
+    wall = time.perf_counter() - t0
+    useful = int(sum(f.tokens.size for f in finished))
+    return {"tok_per_s": useful / wall, "wall_s": wall,
+            "occupancy": engine.occupancy, "tokens": useful,
+            "decode_steps": engine.stats["decode_steps"],
+            "decode_traces": engine.traces["decode"]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="0 = 24 (quick: 12)")
+    ap.add_argument("--capacities", default="",
+                    help="comma list; default '64,128,256' (quick: "
+                    "'64,96')")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    n_req = args.requests or (12 if args.quick else 24)
+    caps = ([int(c) for c in args.capacities.split(",")] if args.capacities
+            else ([64, 96] if args.quick else [64, 128, 256]))
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    requests = make_requests(cfg, n_req, rng)
+
+    rows = []
+    print(f"{cfg.name} ({cfg.family}) — {n_req} requests, "
+          f"slots={args.slots}")
+    print(f"{'capacity':>9s} {'engine':>11s} {'tok/s':>8s} {'occ':>6s} "
+          f"{'wall s':>8s}")
+    for cap in caps:
+        st = bench_static(model, params, cfg, requests, args.slots, cap)
+        co = bench_continuous(model, params, cfg, requests, args.slots, cap)
+        assert co["decode_traces"] == 1, co["decode_traces"]
+        for name, r in (("static", st), ("continuous", co)):
+            print(f"{cap:9d} {name:>11s} {r['tok_per_s']:8.1f} "
+                  f"{r['occupancy']:6.2f} {r['wall_s']:8.2f}")
+        rows.append({"capacity": cap, "static": st, "continuous": co,
+                     "speedup": co["tok_per_s"] / st["tok_per_s"]})
+
+    payload = {"arch": cfg.name, "family": cfg.family, "slots": args.slots,
+               "requests": n_req, "backend": jax.default_backend(),
+               "rows": rows}
+    if args.out:
+        try:
+            with open(args.out) as f:
+                existing = json.load(f)
+        except (OSError, ValueError):
+            existing = {}
+        existing["serve"] = payload
+        with open(args.out, "w") as f:
+            json.dump(existing, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

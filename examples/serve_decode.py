@@ -1,41 +1,74 @@
-"""Batched serving example: prefill a batch of prompts, then stream
-greedy decode steps against the persistent KV/SSM cache — across FOUR
-different architecture families (dense GQA, MLA, SSM, hybrid) to show
-the one serving API covers them all.
+"""Continuous-batching serving example: staggered request arrivals with
+heterogeneous prompt/output lengths stream through the slot-paged
+ServeEngine — across FOUR architecture families (dense GQA, MLA, SSM,
+hybrid) to show one serving API covers them all. Requests join mid-flight
+as slots free up; the engine issues ONE donated jitted decode call per
+token and reports per-request latency plus aggregate tok/s.
 
 Run: PYTHONPATH=src python examples/serve_decode.py
+     PYTHONPATH=src python examples/serve_decode.py --arch zamba2-7b \
+         --slots 8 --sampler top_k:20:0.7 --set sliding_window=32
 """
 
-import time
+import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
+from repro.configs import ARCHS, get_config
+from repro.launch.overrides import apply_overrides
+from repro.launch.serve import serve_traffic
 from repro.models import build_model
-from repro.serve import DecodeEngine
+from repro.serve import ServeEngine, parse_sampler
 
-ARCHS = ["qwen3-14b", "deepseek-v2-236b", "falcon-mamba-7b", "zamba2-7b"]
+DEFAULT_ARCHS = ["qwen3-14b", "deepseek-v2-236b", "falcon-mamba-7b",
+                 "zamba2-7b"]
 
 
 def main() -> None:
-    rng = np.random.default_rng(0)
-    for arch in ARCHS:
-        cfg = get_config(arch).reduced()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", choices=sorted(ARCHS),
+                    help="arch to serve (repeatable; default: one per "
+                    "family)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--capacity", type=int, default=96)
+    ap.add_argument("--sampler", default="greedy",
+                    help="greedy | temperature:T | top_k:K[:T] | "
+                    "top_p:P[:T]")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="FIELD=VALUE", help="config override")
+    args = ap.parse_args()
+
+    for arch in args.arch or DEFAULT_ARCHS:
+        cfg = apply_overrides(get_config(arch).reduced(), args.set)
         model = build_model(cfg)
         params = model.init(jax.random.key(1))
-        engine = DecodeEngine(model, params, cfg)
-        B, S, new = 4, 16, 24
-        prompt = {"tokens": jnp.asarray(
-            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
-        t0 = time.perf_counter()
-        out = engine.generate(prompt, max_new_tokens=new)
-        dt = time.perf_counter() - t0
-        toks = B * new
-        print(f"{arch:22s} ({cfg.family:6s}) prefill {S} + decode {new} "
-              f"x batch {B}: {dt:.2f}s ({toks/dt:.0f} tok/s) "
-              f"sample={np.asarray(out[0, :8])}")
+        engine = ServeEngine(model, params, cfg, slots=args.slots,
+                             capacity=args.capacity,
+                             sampler=parse_sampler(args.sampler),
+                             prefill_bucket=8, seed=args.seed)
+
+        # staggered arrivals (every ~2 engine steps), heterogeneous
+        # prompt lengths 4..20 and output lengths 4..16
+        rng = np.random.default_rng(args.seed)
+        traffic = [(2 * i,
+                    rng.integers(0, cfg.vocab_size, (int(rng.integers(4, 21)),)),
+                    int(rng.integers(4, 17)))
+                   for i in range(args.requests)]
+        rep = serve_traffic(engine, traffic)
+
+        print(f"{arch:22s} ({cfg.family:6s}) {rep['requests']} reqs, "
+              f"{rep['tokens']} tok in {rep['wall_s']:.2f}s "
+              f"({rep['tok_per_s']:.0f} tok/s) occ {rep['occupancy']:.2f} "
+              f"lat {rep['latency_mean_s']*1e3:.0f}ms "
+              f"ttft {rep['ttft_mean_s']*1e3:.0f}ms "
+              f"[{rep['decode_steps']} steps, {rep['decode_traces']} trace]")
+        for f in rep["finished"][:3]:
+            print(f"    req {f.request.rid}: prompt {f.request.prompt_len:2d} "
+                  f"-> {f.tokens.size:2d} tok  latency "
+                  f"{f.latency*1e3:6.1f} ms  sample={f.tokens[:6]}")
 
 
 if __name__ == "__main__":

@@ -86,8 +86,13 @@ class Prefetcher:
                 break
             except queue.Empty:
                 if not self._thread.is_alive():
-                    # producer died without managing to post the sentinel
-                    item = self._DONE
+                    # producer exited; it may have enqueued final batches
+                    # (and the sentinel) between our timeout and the
+                    # liveness check — drain before concluding DONE
+                    try:
+                        item = self._q.get_nowait()
+                    except queue.Empty:
+                        item = self._DONE
                     break
         if item is self._DONE:
             self._finished = True

@@ -23,6 +23,7 @@ Per-sequence valid lengths mask the tail (cache is a ring of capacity S).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +31,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1.0e30
+
+
+@functools.cache
+def default_interpret() -> bool:
+    """Interpreter mode wherever the Mosaic kernel cannot compile.
+
+    This is a TPU-dialect kernel (``pltpu.VMEM`` scratch): only the TPU
+    backend compiles it; CPU/GPU fall back to the Pallas interpreter.
+    Callers thread an explicit ``interpret=`` override for tests that
+    pin one mode.
+    """
+    return jax.default_backend() != "tpu"
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
@@ -71,12 +84,16 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
 
 def flash_decode_grouped(q4: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                          lengths2: jnp.ndarray, *, scale: float,
-                         bs: int = 512, interpret: bool = True
+                         bs: int = 512, interpret: Optional[bool] = None
                          ) -> jnp.ndarray:
     """q4: (B, Hkv, G, D); k/v: (B, S, Hkv, D); lengths2: (B, 1) int32.
 
     Returns (B, Hkv, G, D) attention output in q4.dtype.
+    ``interpret=None`` auto-selects from the backend (TPU compiles the
+    Mosaic kernel; CPU/GPU interpret).
     """
+    if interpret is None:
+        interpret = default_interpret()
     B, Hkv, G, D = q4.shape
     S = k.shape[1]
     assert S % bs == 0, (S, bs)

@@ -17,8 +17,6 @@ Responsibilities:
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -29,9 +27,9 @@ LANE = packing.LANE      # packed lane dim (multiple of 128)
 BM = packing.BLOCK_ROWS  # sublane rows per block
 
 
-@functools.cache
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+# one interpret policy for every kernel in the package (TPU compiles;
+# CPU/GPU run the interpreter)
+_interpret = fd.default_interpret
 
 
 # ------------------------------------------------------------ packed kernels
@@ -111,9 +109,15 @@ def lars_apply(w: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray, *,
 
 def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                  lengths: jnp.ndarray, *, scale: float | None = None,
-                 block_size: int = 512) -> jnp.ndarray:
+                 block_size: int = 512,
+                 interpret: bool | None = None) -> jnp.ndarray:
     """Single-token decode attention. q (B,H,D); k/v (B,S,Hkv,D);
-    lengths (B,) int32. Returns (B,H,D)."""
+    lengths (B,) int32. Returns (B,H,D).
+
+    ``interpret`` defaults to backend auto-selection (TPU compiles the
+    Mosaic kernel; CPU/GPU interpret); tests pass an explicit override
+    to pin one mode.
+    """
     B, H, D = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     assert H % Hkv == 0, (H, Hkv)
@@ -128,6 +132,5 @@ def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     q4 = q.reshape(B, Hkv, G, D)
     out4 = fd.flash_decode_grouped(q4, k, v,
                                    lengths.reshape(B, 1).astype(jnp.int32),
-                                   scale=scale, bs=bs,
-                                   interpret=_interpret())
+                                   scale=scale, bs=bs, interpret=interpret)
     return out4.reshape(B, H, D)

@@ -35,3 +35,29 @@ def make_host_mesh(*, model: int = 1):
     """Degenerate mesh over the local device(s) — examples / smoke runs."""
     n = len(jax.devices())
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def mesh_from_spec(spec: str, *, allow_none: bool = False):
+    """Shared ``--mesh`` CLI parsing (train + serve launchers).
+
+    ``DATAxMODEL`` (e.g. ``4x2``) -> explicit (data, model) mesh over
+    the leading D*M devices; ``auto`` -> all local devices on the data
+    axis; ``none`` (serve: single-device engine) -> None when
+    ``allow_none``.
+    """
+    if allow_none and spec == "none":
+        return None
+    devs = jax.devices()
+    if spec == "auto":
+        return jax.make_mesh((len(devs), 1), ("data", "model"))
+    try:
+        data, model = (int(s) for s in spec.lower().split("x"))
+    except ValueError:
+        choices = "'auto'" + (", 'none'" if allow_none else "")
+        raise SystemExit(f"--mesh expects {choices} or DATAxMODEL, "
+                         f"got {spec!r}")
+    if data * model > len(devs):
+        raise SystemExit(f"--mesh {spec} needs {data * model} devices, "
+                         f"have {len(devs)}")
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=devs[:data * model])

@@ -27,6 +27,7 @@ from repro.core.scaling import scaled_lr
 from repro.data import (ShardedLoader, TokenTaskConfig, batch_iterator,
                         synthetic_mnist, token_batches)
 from repro.distributed.sharding import batch_pspecs
+from repro.launch.mesh import mesh_from_spec
 from repro.launch.overrides import apply_overrides
 from repro.models import build_model
 from repro.train import TrainPipeline, make_eval_step, train_loop
@@ -44,24 +45,6 @@ def lm_batches(cfg, batch: int, seq: int, seed: int = 0):
             b["image_embeddings"] = np.zeros(
                 (batch, cfg.num_image_tokens, cfg.d_model), np.float32)
         yield b
-
-
-def make_mesh(spec: str):
-    """``auto`` -> all local devices on the data axis; ``DxM`` -> an
-    explicit (data, model) mesh over the leading D*M devices."""
-    devs = jax.devices()
-    if spec == "auto":
-        return jax.make_mesh((len(devs), 1), ("data", "model"))
-    try:
-        data, model = (int(s) for s in spec.lower().split("x"))
-    except ValueError:
-        raise SystemExit(f"--mesh expects 'auto' or 'DATAxMODEL', "
-                         f"got {spec!r}")
-    if data * model > len(devs):
-        raise SystemExit(f"--mesh {spec} needs {data * model} devices, "
-                         f"have {len(devs)}")
-    return jax.make_mesh((data, model), ("data", "model"),
-                         devices=devs[:data * model])
 
 
 def make_lr_schedule(args) -> schedules.Schedule:
@@ -123,7 +106,7 @@ def main() -> None:
         cfg = cfg.reduced()
     cfg = apply_overrides(cfg, args.set)
     model = build_model(cfg)
-    mesh = make_mesh(args.mesh)
+    mesh = mesh_from_spec(args.mesh)
 
     opt = get_optimizer(args.optimizer, learning_rate=make_lr_schedule(args))
     pipeline = TrainPipeline(model, opt, cfg,

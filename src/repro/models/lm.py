@@ -291,7 +291,7 @@ class LanguageModel:
     # ---------------------------------------------------------------- decode
 
     def _layer_decode(self, params_l, x, cache_l, pos, prefix_len, layer_idx,
-                      shared, shared_cache):
+                      shared, shared_cache, use_flash=False):
         """One layer, one token. cache_l: this layer's cache slices.
         Returns (x, new_cache_l, new_shared_cache)."""
         cfg = self.cfg
@@ -317,7 +317,8 @@ class LanguageModel:
                                                        keepdims=False)
                     h = L.apply_norm(cfg, x, shared["ln1"])
                     out, k_l, v_l = A.decode_attention(
-                        cfg, shared["attn"], h, k_l, v_l, pos)
+                        cfg, shared["attn"], h, k_l, v_l, pos,
+                        use_flash=use_flash)
                     x = x + out
                     h = L.apply_norm(cfg, x, shared["ln2"])
                     x = x + mlp_block(cfg, shared["mlp"], h)
@@ -342,7 +343,8 @@ class LanguageModel:
         else:
             out, k, v = A.decode_attention(cfg, params_l["attn"], h,
                                            cache_l["k"], cache_l["v"], pos,
-                                           prefix_len=prefix_len)
+                                           prefix_len=prefix_len,
+                                           use_flash=use_flash)
             new_cache_l = dict(cache_l, k=k, v=v)
         x = x + out
         h = L.apply_norm(cfg, x, params_l["ln2"])
@@ -353,9 +355,15 @@ class LanguageModel:
             x = x + mlp_block(cfg, params_l["mlp"], h)
         return x, new_cache_l, shared_cache
 
-    def decode_step(self, params, cache, tokens, *, prefix_len=None
-                    ) -> tuple[jnp.ndarray, Pytree]:
-        """tokens (B, 1) -> (logits (B, 1, V), updated cache)."""
+    def decode_step(self, params, cache, tokens, *, prefix_len=None,
+                    use_flash: bool = False) -> tuple[jnp.ndarray, Pytree]:
+        """tokens (B, 1) -> (logits (B, 1, V), updated cache).
+
+        ``use_flash`` routes GQA attention (dense layers and the hybrid
+        shared block) through the Pallas flash-decode megakernel with
+        the cache's real per-slot lengths; MLA/SSM layers are
+        unaffected. Static — close it into the jitted serve step.
+        """
         cfg = self.cfg
         x = self.embed_tokens(params, tokens)
         pos = cache["pos"]
@@ -370,7 +378,7 @@ class LanguageModel:
             params_l, cache_l, idx = inp
             x, new_cache_l, shared_cache = self._layer_decode(
                 params_l, x, cache_l, pos, prefix_len, idx, shared,
-                shared_cache)
+                shared_cache, use_flash=use_flash)
             return (x, shared_cache), new_cache_l
 
         if cfg.scan_layers:
@@ -397,18 +405,28 @@ class LanguageModel:
     # --------------------------------------------------------------- prefill
 
     def prefill(self, params, tokens, *, image_embeddings=None,
-                cache_len: Optional[int] = None
+                cache_len: Optional[int] = None, lengths=None
                 ) -> tuple[jnp.ndarray, Pytree]:
         """Run the full prompt, building a decode cache.
 
         Implemented as forward + per-layer KV collection for attention
         archs, and a state-carrying pass for SSM/hybrid. Returns
         (last-token logits (B, V), cache ready for decode_step).
+
+        ``lengths`` (B,) int32 marks per-row true prompt lengths of a
+        right-padded token batch (heterogeneous-length slot admission):
+        logits come from each row's last VALID position, the cache pos
+        is set to ``lengths``, windowed KV rings are aligned per row,
+        and SSM states are masked so pad tokens are identity steps.
+        Causality makes the padded forward exact for valid positions;
+        pad-position KV entries are never read back (decode masks
+        kv_len = pos+1). Not supported for prefix-LM (vlm) prefill.
         """
         cfg = self.cfg
         x = self.embed_tokens(params, tokens)
         prefix_len = None
         if cfg.family == "vlm":
+            assert lengths is None, "vlm prefill has no lengths support"
             x = jnp.concatenate([image_embeddings.astype(x.dtype), x], axis=1)
             prefix_len = image_embeddings.shape[1]
         B, S, d = x.shape
@@ -418,7 +436,8 @@ class LanguageModel:
         shared = params.get("shared")
 
         if cfg.family in ("ssm", "hybrid"):
-            return self._prefill_recurrent(params, x, positions, cache)
+            return self._prefill_recurrent(params, x, positions, cache,
+                                           lengths=lengths)
 
         def body(carry, inp):
             x, = carry
@@ -461,7 +480,7 @@ class LanguageModel:
             (x,) = carry
             kvs = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
 
-        logits = self.logits(params, x[:, -1:])[:, 0]
+        logits = self._last_valid_logits(params, x, lengths)
         if cfg.use_mla:
             cache["ckv"] = _fit(kvs["ckv"].astype(cache["ckv"].dtype),
                                 cache["ckv"].shape[2], axis=2)
@@ -469,20 +488,90 @@ class LanguageModel:
                                   cache["krope"].shape[2], axis=2)
         else:
             s_buf = cache["k"].shape[2]
-            k_fit = _fit(kvs["k"].astype(cache["k"].dtype), s_buf, axis=2)
-            v_fit = _fit(kvs["v"].astype(cache["v"].dtype), s_buf, axis=2)
-            if cfg.sliding_window and S > s_buf:
-                # ring-align: absolute position p must sit at slot p % s_buf
-                k_fit = jnp.roll(k_fit, S % s_buf, axis=2)
-                v_fit = jnp.roll(v_fit, S % s_buf, axis=2)
-            cache["k"], cache["v"] = k_fit, v_fit
-        cache["pos"] = jnp.full((B,), S, jnp.int32)
+            windowed = bool(cfg.sliding_window) and cfg.sliding_window <= s_buf
+            if lengths is not None and windowed:
+                # per-row ring alignment (heterogeneous true lengths)
+                ring = functools.partial(_ring_gather, lengths=lengths,
+                                         cap=s_buf)
+                cache["k"] = jax.vmap(ring)(
+                    kvs["k"].astype(cache["k"].dtype))
+                cache["v"] = jax.vmap(ring)(
+                    kvs["v"].astype(cache["v"].dtype))
+            else:
+                k_fit = _fit(kvs["k"].astype(cache["k"].dtype), s_buf, axis=2)
+                v_fit = _fit(kvs["v"].astype(cache["v"].dtype), s_buf, axis=2)
+                if cfg.sliding_window and S > s_buf:
+                    # ring-align: absolute position p must sit at slot
+                    # p % s_buf
+                    k_fit = jnp.roll(k_fit, S % s_buf, axis=2)
+                    v_fit = jnp.roll(v_fit, S % s_buf, axis=2)
+                cache["k"], cache["v"] = k_fit, v_fit
+        cache["pos"] = (jnp.full((B,), S, jnp.int32) if lengths is None
+                        else lengths.astype(jnp.int32))
         return logits, cache
 
-    def _prefill_recurrent(self, params, x, positions, cache):
+    def _last_valid_logits(self, params, x, lengths):
+        """Logits of each row's last valid position ((B, V) f32)."""
+        if lengths is None:
+            return self.logits(params, x[:, -1:])[:, 0]
+        idx = (lengths.astype(jnp.int32) - 1)[:, None, None]
+        x_last = jnp.take_along_axis(x, idx, axis=1)         # (B, 1, d)
+        return self.logits(params, x_last)[:, 0]
+
+    # ------------------------------------------------------ slot admission
+
+    def cache_capacity(self, cache: Pytree) -> Optional[int]:
+        """Token capacity of a decode cache (None for pure-SSM caches,
+        whose recurrent state is O(1) in sequence length)."""
+        for k in ("k", "ckv", "attn_k"):
+            if k in cache:
+                return cache[k].shape[2]
+        return None
+
+    def prefill_at(self, params, cache, tokens, slots, *, lengths=None
+                   ) -> tuple[jnp.ndarray, Pytree]:
+        """Prefill prompts and write the resulting decode state into
+        rows ``slots`` of a persistent slot cache (continuous-batching
+        admission).
+
+        cache: a live decode cache for ALL slots (``init_cache(slots,
+        capacity)``); tokens (n, S) right-padded prompts; slots (n,)
+        int32 slot ids; lengths (n,) true prompt lengths (None = all S).
+        Returns (last-valid-token logits (n, V), updated cache). Pure —
+        jit with the cache donated; the scatter touches only the
+        admitted rows, so untouched slots keep decoding state intact.
+        """
+        cap = self.cache_capacity(cache)
+        # a ring (sliding-window) buffer admits prompts LONGER than the
+        # buffer — _ring_gather keeps the newest window per row; only a
+        # linear buffer hard-bounds the prompt
+        ring = (cap is not None and bool(self.cfg.sliding_window)
+                and self.cfg.sliding_window <= cap)
+        if cap is not None and not ring and tokens.shape[1] > cap:
+            raise ValueError(f"prompt buffer {tokens.shape[1]} exceeds "
+                             f"cache capacity {cap}")
+        logits, small = self.prefill(params, tokens,
+                                     cache_len=cap or tokens.shape[1],
+                                     lengths=lengths)
+        slots = slots.astype(jnp.int32)
+        out = {}
+        for name, big in cache.items():
+            new = small[name]
+            if name == "pos":                  # (B,) — batch axis 0
+                out[name] = big.at[slots].set(new.astype(big.dtype))
+            else:                              # (L, B, ...) — batch axis 1
+                out[name] = big.at[:, slots].set(new.astype(big.dtype))
+        return logits, out
+
+    def _prefill_recurrent(self, params, x, positions, cache, lengths=None):
         """SSM/hybrid prefill: full-sequence pass per layer, carrying the
         recurrent state; hybrid shared-attention KV is collected for the
-        last `window` positions of each application."""
+        last `window` positions of each application.
+
+        ``lengths``: see :meth:`prefill` — pad positions are identity
+        steps for the recurrence, and the shared-attention ring is
+        aligned per row (the scan then collects FULL-length KV so short
+        rows keep their early positions)."""
         cfg = self.cfg
         B, S, d = x.shape
         shared = params.get("shared")
@@ -492,13 +581,15 @@ class LanguageModel:
                       "h": jnp.zeros_like(cache["h"][0])}
         if hybrid:
             s_buf = cache["attn_k"].shape[2]
+            kv_keep = s_buf if lengths is None else S
             H, Hkv, hd = cfg.attn_dims
 
         def body(carry, inp):
             x, = carry
             params_l, idx = inp
             h = L.apply_norm(cfg, x, params_l["ln1"])
-            y, st = fwd(cfg, params_l["ssm"], h, state=zero_state)
+            y, st = fwd(cfg, params_l["ssm"], h, state=zero_state,
+                        lengths=lengths)
             x = x + y
             ys = {"conv": st["conv"], "h": st["h"]}
             if hybrid:
@@ -512,10 +603,11 @@ class LanguageModel:
                     x = x + out.reshape(B, S, H * hd) @ shared["attn"]["wo"]
                     hh = L.apply_norm(cfg, x, shared["ln2"])
                     x = x + mlp_block(cfg, shared["mlp"], hh)
-                    return x, _fit(k, s_buf, axis=1), _fit(v, s_buf, axis=1)
+                    return x, _fit(k, kv_keep, axis=1), _fit(v, kv_keep,
+                                                            axis=1)
 
                 def skip_branch(x):
-                    z = jnp.zeros((B, s_buf, Hkv, hd), x.dtype)
+                    z = jnp.zeros((B, kv_keep, Hkv, hd), x.dtype)
                     return x, z, z
 
                 x, kk, vv = jax.lax.cond(idx % cfg.attn_every == 0,
@@ -541,17 +633,51 @@ class LanguageModel:
         cache["h"] = ys["h"]
         if hybrid:
             sel = jnp.arange(0, cfg.num_layers, cfg.attn_every)
-            # ring-align: slot i of the window buffer must hold absolute
-            # position (S - s_buf + i) ... which is (S - s_buf + i) % s_buf
-            # in ring coordinates. Roll the linear tail accordingly.
-            shift = S % s_buf if S > s_buf else 0
-            cache["attn_k"] = jnp.roll(
-                ys["kk"][sel].astype(cache["attn_k"].dtype), shift, axis=2)
-            cache["attn_v"] = jnp.roll(
-                ys["vv"][sel].astype(cache["attn_v"].dtype), shift, axis=2)
-        cache["pos"] = jnp.full((B,), S, jnp.int32)
-        logits = self.logits(params, x[:, -1:])[:, 0]
+            if lengths is not None:
+                # full-length KV collected: ring-align each row by its
+                # true length (vmap over shared-block applications)
+                ring = functools.partial(_ring_gather, lengths=lengths,
+                                         cap=s_buf)
+                cache["attn_k"] = jax.vmap(ring)(
+                    ys["kk"][sel].astype(cache["attn_k"].dtype))
+                cache["attn_v"] = jax.vmap(ring)(
+                    ys["vv"][sel].astype(cache["attn_v"].dtype))
+            else:
+                # ring-align: slot i of the window buffer must hold
+                # absolute position (S - s_buf + i) ... which is
+                # (S - s_buf + i) % s_buf in ring coordinates. Roll the
+                # linear tail accordingly.
+                shift = S % s_buf if S > s_buf else 0
+                cache["attn_k"] = jnp.roll(
+                    ys["kk"][sel].astype(cache["attn_k"].dtype), shift,
+                    axis=2)
+                cache["attn_v"] = jnp.roll(
+                    ys["vv"][sel].astype(cache["attn_v"].dtype), shift,
+                    axis=2)
+        cache["pos"] = (jnp.full((B,), S, jnp.int32) if lengths is None
+                        else lengths.astype(jnp.int32))
+        logits = self._last_valid_logits(params, x, lengths)
         return logits, cache
+
+
+def _ring_gather(kv, lengths, cap: int):
+    """Per-row ring alignment of a full-length KV stripe.
+
+    kv (B, S, ...) holds positions 0..S-1 of a right-padded batch whose
+    true lengths are ``lengths`` (B,). Returns (B, cap, ...) where ring
+    slot j holds the newest valid position p < lengths[b] with
+    p % cap == j — exactly the layout the windowed decode ring expects
+    (slot = pos % cap). Slots with no valid position (short rows) carry
+    garbage that the decode validity mask (kv_len) never reads.
+    """
+    B, S = kv.shape[:2]
+    j = jnp.arange(cap)[None, :]                        # (1, cap)
+    base = lengths[:, None].astype(jnp.int32) - cap     # (B, 1)
+    # smallest multiple of cap lifting j into [len-cap, len)
+    extra = jnp.maximum(0, (base - j + cap - 1) // cap)
+    p = jnp.clip(j + cap * extra, 0, S - 1)             # (B, cap)
+    idx = p.reshape((B, cap) + (1,) * (kv.ndim - 2))
+    return jnp.take_along_axis(kv, idx, axis=1)
 
 
 def _fit(x, cap: int, *, axis: int):

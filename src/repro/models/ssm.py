@@ -26,11 +26,14 @@ from repro.models import layers as L
 
 # ------------------------------------------------------------- causal conv1d
 
-def causal_conv1d(x, w, b, *, state=None):
+def causal_conv1d(x, w, b, *, state=None, lengths=None):
     """Depthwise causal conv. x (B, S, C), w (K, C), b (C,).
 
     state (B, K-1, C) carries the left context for decode; returns
-    (y, new_state).
+    (y, new_state). ``lengths`` (B,) int32 marks per-row valid prefixes
+    of a right-padded batch: the carried state is then the last K-1
+    inputs BEFORE each row's padding (slot-wise heterogeneous prefill),
+    not the padded tail.
     """
     B, S, C = x.shape
     K = w.shape[0]
@@ -42,7 +45,17 @@ def causal_conv1d(x, w, b, *, state=None):
     y = sum(w[i].astype(jnp.float32) * xp[:, i:i + S].astype(jnp.float32)
             for i in range(K))
     y = y + b.astype(jnp.float32)
-    new_state = xp[:, -(K - 1):] if K > 1 else jnp.zeros((B, 0, C), x.dtype)
+    if K <= 1:
+        new_state = jnp.zeros((B, 0, C), x.dtype)
+    elif lengths is None:
+        new_state = xp[:, -(K - 1):]
+    else:
+        # row b's state = xp[b, len_b : len_b + K-1] — the K-1 inputs
+        # ending at its true last token (xp is left-padded by K-1)
+        new_state = jax.vmap(
+            lambda row, l: jax.lax.dynamic_slice_in_dim(row, l, K - 1,
+                                                        axis=0)
+        )(xp, lengths.astype(jnp.int32))
     return y.astype(x.dtype), new_state
 
 
@@ -116,10 +129,15 @@ def _pad_seq(x, pad: int):
     return jnp.pad(x, cfgpad)
 
 
-def mamba1_forward(cfg, p, x, *, state=None, chunk: int = 64):
+def mamba1_forward(cfg, p, x, *, state=None, chunk: int = 64, lengths=None):
     """x (B,S,d). state: None (train/prefill) or dict(conv, h) for decode.
 
     Returns (y (B,S,d), new_state or None if state is None).
+
+    ``lengths`` (B,) int32: per-row valid prefix of a right-padded batch
+    (slot prefill). Padded positions get dt=0, i.e. decay=1 and zero
+    input — the recurrent state is EXACTLY the state after each row's
+    true last token; the conv state is gathered at the row's length.
     """
     B, S, d = x.shape
     din, N = cfg.ssm_d_inner, cfg.ssm_state
@@ -129,13 +147,16 @@ def mamba1_forward(cfg, p, x, *, state=None, chunk: int = 64):
     xs, z = jnp.split(xz, 2, axis=-1)                # (B,S,din)
     conv_state = state["conv"] if state is not None else None
     xs, new_conv = causal_conv1d(xs, p["conv_w"], p["conv_b"],
-                                 state=conv_state)
+                                 state=conv_state, lengths=lengths)
     xs = jax.nn.silu(xs)
 
     dbc = xs @ p["x_proj"]
     dt, Bc, Cc = jnp.split(dbc, [R, R + N], axis=-1)  # (B,S,R),(B,S,N),(B,S,N)
     dt = jax.nn.softplus(dt.astype(jnp.float32) @ p["dt_proj"]
                          + p["dt_bias"])             # (B,S,din)
+    if lengths is not None:
+        seq_mask = jnp.arange(S)[None, :] < lengths[:, None]   # (B,S)
+        dt = dt * seq_mask[..., None]                # pad steps: identity
     A = -jnp.exp(p["A_log"])                         # (din, N)
     xf = xs.astype(jnp.float32)
     Bf = Bc.astype(jnp.float32)
@@ -208,8 +229,13 @@ def init_mamba2(key, cfg, dtype) -> dict:
     }
 
 
-def mamba2_forward(cfg, p, x, *, state=None, chunk: int = 64):
-    """SSD block. x (B,S,d) -> (y (B,S,d), new_state)."""
+def mamba2_forward(cfg, p, x, *, state=None, chunk: int = 64, lengths=None):
+    """SSD block. x (B,S,d) -> (y (B,S,d), new_state).
+
+    ``lengths`` (B,) int32: right-padded batch — pad positions get dt=0
+    (decay 1, zero input) so the carried state matches each row's true
+    prefix; conv state gathered at the row's length (slot prefill).
+    """
     B, S, d = x.shape
     din, N = cfg.ssm_d_inner, cfg.ssm_state
     hd = cfg.ssm_head_dim
@@ -220,7 +246,7 @@ def mamba2_forward(cfg, p, x, *, state=None, chunk: int = 64):
     z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * G * N], axis=-1)
     conv_state = state["conv"] if state is not None else None
     xbc, new_conv = causal_conv1d(xbc, p["conv_w"], p["conv_b"],
-                                  state=conv_state)
+                                  state=conv_state, lengths=lengths)
     xbc = jax.nn.silu(xbc)
     xs, Bc, Cc = jnp.split(xbc, [din, din + G * N], axis=-1)
     xs = xs.reshape(B, S, heads, hd)
@@ -231,6 +257,9 @@ def mamba2_forward(cfg, p, x, *, state=None, chunk: int = 64):
     Ch = jnp.repeat(Cc, rep, axis=2)
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,heads)
+    if lengths is not None:
+        seq_mask = jnp.arange(S)[None, :] < lengths[:, None]     # (B,S)
+        dt = dt * seq_mask[..., None]                 # pad steps: identity
     A = -jnp.exp(p["A_log"])                          # (heads,)
     xf = xs.astype(jnp.float32)
     Bf = Bh.astype(jnp.float32)

@@ -1,5 +1,11 @@
-"""Serving runtime: prefill/decode step factories over the models' KV/SSM
-caches, and a batched greedy-decode engine."""
+"""Serving runtime: slot-paged persistent KV/SSM cache, bounded-FIFO
+request scheduler, in-jit sampling, and the continuous-batching engine
+(plus the legacy static-batch engine and dry-run step factories)."""
 
-from repro.serve.engine import (make_prefill_step, make_serve_step,  # noqa: F401
-                                DecodeEngine)
+from repro.serve.cache import SlotCache  # noqa: F401
+from repro.serve.engine import (DecodeEngine, ServeEngine,  # noqa: F401
+                                make_prefill_step, make_serve_step)
+from repro.serve.sampling import (SamplerConfig, parse_sampler,  # noqa: F401
+                                  sample)
+from repro.serve.scheduler import (FinishedRequest, QueueFull,  # noqa: F401
+                                   Request, RequestScheduler)

@@ -1,0 +1,84 @@
+"""Slot-paged persistent decode cache.
+
+The continuous-batching engine decodes a FIXED device-resident batch of
+``slots`` sequences; requests are admitted into free slots (prefill
+scatters their KV/SSM state into the slot's rows — see
+``LanguageModel.prefill_at``) and retired on EOS/max-tokens, at which
+point the slot is simply marked free. Cache contents never round-trip
+through the host: the pytree lives on device for the engine's lifetime,
+is donated through every decode step, and only (slots, 1) int32 tokens
+cross the host boundary per step.
+
+A retired-but-unreused slot keeps decoding garbage (its lane of the
+batch still runs); that compute is the price of a static batch shape
+and is reported as (1 - occupancy) by the benchmark.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+Pytree = Any
+
+
+class SlotCache:
+    """Fixed (slots, capacity) device cache + free-slot accounting.
+
+    ``capacity`` bounds prompt_len + max_new_tokens per request for
+    attention-family models (KV buffers are (L, slots, capacity, ...));
+    pure-SSM caches are O(1) in sequence length, but the same bound is
+    enforced so admission policy is family-independent.
+
+    With a ``mesh``, the cache is placed by
+    ``distributed.sharding.cache_pspecs`` (sequence over ``model`` —
+    flash-decoding split-KV; slots over ``data``) and the specs are
+    exposed for the engine's explicit in/out shardings (donation needs
+    matching layouts).
+    """
+
+    def __init__(self, model, slots: int, capacity: int, *, mesh=None,
+                 dtype=None):
+        if slots < 1 or capacity < 1:
+            raise ValueError(f"bad slot cache shape ({slots}, {capacity})")
+        self.model = model
+        self.slots = slots
+        self.capacity = capacity
+        self.mesh = mesh
+        data = model.init_cache(slots, capacity, dtype)
+        self.pspecs: Optional[Pytree] = None
+        self.shardings: Optional[Pytree] = None
+        if mesh is not None:
+            from repro.distributed.sharding import cache_pspecs, tree_named
+            self.pspecs = cache_pspecs(
+                model.cfg, mesh, jax.eval_shape(lambda: data), batch=slots)
+            self.shardings = tree_named(mesh, self.pspecs)
+            data = jax.device_put(data, self.shardings)
+        self.data = data
+        self._free = list(range(slots - 1, -1, -1))   # pop() -> slot 0 first
+
+    # ------------------------------------------------------------ slots
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_slots(self) -> int:
+        return self.slots - len(self._free)
+
+    def acquire(self) -> Optional[int]:
+        """Claim a free slot (None if fully occupied)."""
+        return self._free.pop() if self._free else None
+
+    def release(self, slot: int) -> None:
+        """Retire a slot; its device rows become reusable garbage."""
+        if not 0 <= slot < self.slots:
+            raise ValueError(f"slot {slot} out of range [0, {self.slots})")
+        if slot in self._free:
+            raise ValueError(f"slot {slot} already free")
+        self._free.append(slot)
+
+    def fits(self, prompt_len: int, max_new_tokens: int) -> bool:
+        return prompt_len + max_new_tokens <= self.capacity

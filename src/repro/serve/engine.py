@@ -1,19 +1,43 @@
-"""Batched serving: prefill (prompt -> cache) and serve_step (ONE token
-against a seq_len cache — the dry-run decode workload), plus a greedy
-engine for the examples.
+"""Serving engines: the continuous-batching :class:`ServeEngine` (slot
+cache + scheduler + in-jit sampling) and the legacy static-batch
+:class:`DecodeEngine` (kept as the benchmark baseline), plus the
+prefill/serve step factories used by the dry-run harness.
 
-All steps are pure functions of (params, cache, tokens) so they jit/pjit
-directly; the cache pytree is the sharded, persistent object.
+ServeEngine contract (the decode hot path):
+  * ONE jitted call per emitted token, for the whole slot batch, with
+    the cache and token buffers DONATED (keys are read-only per decode
+    step and donated only on admit, which rewrites them) — the
+    persistent KV/SSM state never double-buffers and never visits the
+    host;
+  * sampling (greedy/temperature/top-k/top-p, per-slot RNG) is fused
+    into that call, so only (slots, 1) int32 tokens are shipped back;
+  * admission is a second jitted call (``prefill_at``) that scatters a
+    batch of new requests into free slot rows while resident slots keep
+    their state — the NEXT decode step serves old and new together;
+  * under a mesh, params take the serve (pure-TP when they fit) specs
+    and the cache takes ``cache_pspecs`` (sequence sharded over
+    ``model`` = flash-decoding split-KV), with explicit in/out
+    shardings so donation aliases buffers exactly.
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+import time
+from typing import Any, Callable, Iterable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import sampling
+from repro.serve.cache import SlotCache
+from repro.serve.sampling import SamplerConfig
+from repro.serve.scheduler import (FinishedRequest, Request,
+                                   RequestScheduler)
 
 Pytree = Any
+
+SERVE_FAMILIES = ("dense", "moe", "ssm", "hybrid")
 
 
 def make_prefill_step(model, cfg=None) -> Callable:
@@ -51,10 +75,13 @@ def make_serve_step(model, cfg=None) -> Callable:
 
 
 class DecodeEngine:
-    """Greedy batched decoding for the serving example.
+    """Static-batch greedy decoding (the pre-continuous-batching path).
 
-    prefill once, then step the jitted single-token decode; the cache
-    stays on device (donated through the jit) the whole time.
+    Prefills one fixed batch, then steps the jitted single-token decode
+    for a fixed number of tokens. Kept as the serving benchmark's
+    baseline: every sequence occupies its lane until the LONGEST one
+    finishes, which is exactly the throughput loss continuous batching
+    removes.
     """
 
     def __init__(self, model, params, cfg=None):
@@ -80,3 +107,212 @@ class DecodeEngine:
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
             out.append(tok)
         return jnp.concatenate(out, axis=1)
+
+
+# --------------------------------------------------------------- continuous
+
+class ServeEngine:
+    """Continuous-batching decode over a slot-paged persistent cache.
+
+    Drive it either with :meth:`run` (drain a request list) or manually
+    — ``submit()`` between ``step()`` calls injects traffic mid-flight;
+    each ``step()`` admits whatever fits into free slots and decodes
+    ONE token for every resident sequence.
+    """
+
+    def __init__(self, model, params, cfg=None, *, slots: int = 4,
+                 capacity: int = 256, sampler: Optional[SamplerConfig] = None,
+                 mesh=None, use_flash: Optional[bool] = None,
+                 prefill_bucket: int = 1, max_queue: int = 1024,
+                 seed: int = 0):
+        self.model = model
+        self.cfg = cfg if cfg is not None else model.cfg
+        if self.cfg.family not in SERVE_FAMILIES:
+            raise ValueError(
+                f"ServeEngine covers {SERVE_FAMILIES}, got "
+                f"{self.cfg.family!r}")
+        self.sampler = sampler if sampler is not None else SamplerConfig()
+        self.mesh = mesh
+        # compile the flash-decode megakernel on single-device TPU; the
+        # CPU interpreter is correctness-only, and under a mesh the KV
+        # sequence axis is sharded over `model` — pallas_call has no
+        # partitioning rule for it, so the jnp online-softmax core (the
+        # GSPMD split-KV path) must carry sharded decode
+        self.use_flash = (jax.default_backend() == "tpu" and mesh is None
+                          if use_flash is None else use_flash)
+        self.seed = seed
+        self.cache = SlotCache(model, slots, capacity, mesh=mesh)
+        self.scheduler = RequestScheduler(self.cache, max_queue=max_queue,
+                                          prefill_bucket=prefill_bucket)
+        self._next_rid = 0
+        self.traces = {"decode": 0, "admit": 0}
+        self.stats = {"decode_steps": 0, "admit_calls": 0,
+                      "tokens_out": 0, "occupancy_sum": 0.0}
+
+        toks = jnp.zeros((slots, 1), jnp.int32)
+        keys = jnp.zeros((slots, 2), jnp.uint32)
+        if mesh is None:
+            self.params = params
+            self._shard = {}
+        else:
+            from repro.distributed.sharding import (serve_param_pspecs,
+                                                    tree_named)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            pspecs = serve_param_pspecs(
+                self.cfg, jax.eval_shape(lambda: params), mesh)
+            pshard = tree_named(mesh, pspecs)
+            self.params = jax.device_put(params, pshard)
+            b_ax = self.cache.pspecs["pos"]          # P(batch axes)
+            row = NamedSharding(mesh, P(*b_ax, None))
+            toks = jax.device_put(toks, row)
+            keys = jax.device_put(keys, row)
+            self._shard = {"params": pshard, "cache": self.cache.shardings,
+                           "row": row,
+                           "repl": NamedSharding(mesh, P())}
+        self._toks = toks
+        self._keys = keys
+        self._decode = self._build_decode()
+        self._admit = self._build_admit()
+
+    # ------------------------------------------------------------- jits
+
+    def _build_decode(self) -> Callable:
+        model, scfg, use_flash = self.model, self.sampler, self.use_flash
+
+        def step(params, cache, toks, keys):
+            self.traces["decode"] += 1        # trace-time side effect
+            logits, cache = model.decode_step(params, cache, toks,
+                                              use_flash=use_flash)
+            # token at absolute position p <- fold(slot key, p): pos was
+            # just incremented to where the sampled token will be written
+            step_keys = sampling.fold_positions(keys, cache["pos"])
+            nxt = sampling.sample(scfg, logits[:, -1], step_keys)
+            return nxt[:, None], cache
+
+        if self.mesh is None:
+            return jax.jit(step, donate_argnums=(1, 2))
+        s = self._shard
+        return jax.jit(
+            step,
+            in_shardings=(s["params"], s["cache"], s["row"], s["row"]),
+            out_shardings=(s["row"], s["cache"]),
+            donate_argnums=(1, 2))
+
+    def _build_admit(self) -> Callable:
+        model, scfg = self.model, self.sampler
+
+        def admit(params, cache, toks, keys, prompt, lengths, slot_ids,
+                  req_keys):
+            self.traces["admit"] += 1
+            logits, cache = model.prefill_at(params, cache, prompt,
+                                             slot_ids, lengths=lengths)
+            keys = keys.at[slot_ids].set(req_keys)
+            first = sampling.sample(
+                scfg, logits, sampling.fold_positions(req_keys, lengths))
+            toks = toks.at[slot_ids, 0].set(first)
+            return first, cache, toks, keys
+
+        if self.mesh is None:
+            return jax.jit(admit, donate_argnums=(1, 2, 3))
+        s = self._shard
+        r = s["repl"]
+        return jax.jit(
+            admit,
+            in_shardings=(s["params"], s["cache"], s["row"], s["row"],
+                          r, r, r, r),
+            out_shardings=(r, s["cache"], s["row"], s["row"]),
+            donate_argnums=(1, 2, 3))
+
+    # ------------------------------------------------------------- host
+
+    def submit(self, tokens, max_new_tokens: int, *,
+               eos_id: Optional[int] = None,
+               rid: Optional[int] = None) -> int:
+        """Enqueue one request (bounded FIFO); returns its rid."""
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        req = Request(rid=rid, tokens=np.asarray(tokens),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id)
+        self.scheduler.submit(req, now=time.perf_counter())
+        return rid
+
+    def _admit_pending(self) -> list[FinishedRequest]:
+        finished = []
+        for pad_len, group in sorted(self.scheduler.pop_admissions().items()):
+            n = len(group)
+            prompt = np.zeros((n, pad_len), np.int32)
+            lengths = np.zeros((n,), np.int32)
+            for i, (_, req, _) in enumerate(group):
+                prompt[i, :req.prompt_len] = req.tokens
+                lengths[i] = req.prompt_len
+            slot_ids = np.asarray([s for s, _, _ in group], np.int32)
+            req_keys = sampling.make_keys(
+                self.seed, [req.rid for _, req, _ in group])
+            first, self.cache.data, self._toks, self._keys = self._admit(
+                self.params, self.cache.data, self._toks, self._keys,
+                jnp.asarray(prompt), jnp.asarray(lengths),
+                jnp.asarray(slot_ids), req_keys)
+            self.stats["admit_calls"] += 1
+            now = time.perf_counter()
+            for (slot, _, _), tok in zip(group, np.asarray(first)):
+                self.stats["tokens_out"] += 1
+                fin = self.scheduler.record(slot, int(tok), now)
+                if fin is not None:
+                    finished.append(fin)
+        return finished
+
+    def step(self) -> list[FinishedRequest]:
+        """One engine tick: admit into free slots, then decode ONE token
+        for every resident sequence (a single donated jit call)."""
+        finished = self._admit_pending()
+        if self.scheduler.active:
+            self.stats["decode_steps"] += 1
+            self.stats["occupancy_sum"] += (
+                len(self.scheduler.active) / self.cache.slots)
+            self._toks, self.cache.data = self._decode(
+                self.params, self.cache.data, self._toks, self._keys)
+            emitted = np.asarray(self._toks)[:, 0]   # the ONLY host copy
+            now = time.perf_counter()
+            for slot in list(self.scheduler.active):
+                self.stats["tokens_out"] += 1
+                fin = self.scheduler.record(slot, int(emitted[slot]), now)
+                if fin is not None:
+                    finished.append(fin)
+        return finished
+
+    def run(self, requests: Optional[Iterable] = None
+            ) -> list[FinishedRequest]:
+        """Submit ``requests`` (Request objects or (tokens, max_new)
+        pairs), then step until queue and slots drain."""
+        for r in requests or ():
+            if isinstance(r, Request):
+                self.submit(r.tokens, r.max_new_tokens, eos_id=r.eos_id,
+                            rid=r.rid)
+            else:
+                tokens, max_new = r
+                self.submit(tokens, max_new)
+        finished = []
+        while self.scheduler.has_work():
+            finished.extend(self.step())
+        return finished
+
+    def generate(self, prompts: Sequence, max_new_tokens: int
+                 ) -> list[np.ndarray]:
+        """Convenience: decode ``max_new_tokens`` for each prompt; output
+        ordered like ``prompts`` regardless of scheduling."""
+        rids = [self.submit(p, max_new_tokens) for p in prompts]
+        by_rid = {f.request.rid: f.tokens for f in self.run()}
+        return [by_rid[r] for r in rids]
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots doing useful work per decode step."""
+        steps = self.stats["decode_steps"]
+        return self.stats["occupancy_sum"] / steps if steps else 0.0
+
+    def reset_stats(self) -> None:
+        """Zero the step/occupancy counters (e.g. after a compile
+        warmup); trace counters are kept — they pin the contract."""
+        self.stats = {k: 0.0 if k == "occupancy_sum" else 0
+                      for k in self.stats}

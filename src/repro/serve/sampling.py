@@ -1,0 +1,133 @@
+"""In-jit token sampling for the serve decode step.
+
+Greedy / temperature / top-k / top-p over a (B, V) logits batch with
+per-slot RNG keys. Everything here traces into the ONE donated decode
+step, so the Python serve loop only ever ships (B, 1) int32 tokens —
+logits never leave the device.
+
+Keys are carried as RAW threefry key data ((B, 2) uint32) rather than
+typed key arrays: raw uint32 buffers survive scatter updates (slot
+admission overwrites one row) and donation without special-casing. A
+token at absolute position p is always sampled with
+``fold_in(slot_key, p)`` — deterministic per (request, position), which
+makes continuous-batching output independent of WHEN a request was
+admitted or which slot it landed in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    """Static sampling policy (close it into the jitted step).
+
+    kind: "greedy" | "temperature" | "top_k" | "top_p". temperature
+    applies to all stochastic kinds; top_k/top_p additionally restrict
+    the support before the categorical draw.
+    """
+
+    kind: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in ("greedy", "temperature", "top_k", "top_p"):
+            raise ValueError(f"unknown sampler kind {self.kind!r}")
+        if self.kind == "top_k" and self.top_k <= 0:
+            raise ValueError("top_k sampler needs top_k > 0")
+        if self.kind == "top_p" and not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p sampler needs 0 < top_p <= 1")
+
+    @property
+    def stochastic(self) -> bool:
+        return self.kind != "greedy" and self.temperature > 0.0
+
+
+def parse_sampler(spec: str) -> SamplerConfig:
+    """CLI sampler spec -> SamplerConfig.
+
+    ``greedy`` | ``temperature:T`` | ``top_k:K[:T]`` | ``top_p:P[:T]``
+    (T defaults to 1.0), e.g. ``top_k:40:0.8``.
+    """
+    parts = spec.split(":")
+    kind = parts[0]
+    try:
+        if kind == "greedy" and len(parts) == 1:
+            return SamplerConfig("greedy")
+        if kind == "temperature" and len(parts) == 2:
+            return SamplerConfig("temperature", temperature=float(parts[1]))
+        if kind == "top_k" and len(parts) in (2, 3):
+            t = float(parts[2]) if len(parts) > 2 else 1.0
+            return SamplerConfig("top_k", top_k=int(parts[1]), temperature=t)
+        if kind == "top_p" and len(parts) in (2, 3):
+            t = float(parts[2]) if len(parts) > 2 else 1.0
+            return SamplerConfig("top_p", top_p=float(parts[1]),
+                                 temperature=t)
+    except ValueError as e:                 # bad number / bad range
+        raise ValueError(f"cannot parse sampler spec {spec!r}: {e}")
+    raise ValueError(f"cannot parse sampler spec {spec!r}")
+
+
+# ------------------------------------------------------------------- keys
+
+def make_keys(seed: int, ids) -> jnp.ndarray:
+    """Per-request raw key data: fold each id into a seed key.
+
+    ids: (n,) int array (request ids). Returns (n, 2) uint32.
+    """
+    base = jax.random.key(seed)
+    return jax.vmap(
+        lambda r: jax.random.key_data(jax.random.fold_in(base, r))
+    )(jnp.asarray(ids, jnp.uint32))
+
+
+def fold_positions(key_data: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """fold_in each slot's key with its position ((B,2)u32, (B,)i32)."""
+    keys = jax.random.wrap_key_data(key_data)           # (B,) key array
+    return jax.vmap(
+        lambda k, p: jax.random.key_data(jax.random.fold_in(k, p))
+    )(keys, pos.astype(jnp.uint32))
+
+
+# ----------------------------------------------------------------- sample
+
+def _top_k_mask(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    kth = jax.lax.top_k(x, k)[0][..., -1:]              # (B, 1)
+    return jnp.where(x < kth, NEG_INF, x)
+
+
+def _top_p_mask(x: jnp.ndarray, p: float) -> jnp.ndarray:
+    # nucleus: keep the smallest prefix of the sorted distribution whose
+    # mass reaches p (the token crossing the boundary is kept)
+    sorted_x = jnp.sort(x, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_x, axis=-1)
+    csum = jnp.cumsum(probs, axis=-1)
+    keep = (csum - probs) < p                           # exclusive prefix
+    kth = jnp.min(jnp.where(keep, sorted_x, jnp.inf), axis=-1, keepdims=True)
+    return jnp.where(x < kth, NEG_INF, x)
+
+
+def sample(scfg: SamplerConfig, logits: jnp.ndarray,
+           key_data: jnp.ndarray) -> jnp.ndarray:
+    """One token per row. logits (B, V) f32; key_data (B, 2) uint32.
+
+    Returns (B,) int32. As temperature -> 0 every stochastic kind
+    converges to greedy (the scaled logit gap dwarfs the Gumbel noise).
+    """
+    if not scfg.stochastic:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    x = logits.astype(jnp.float32) / jnp.maximum(scfg.temperature, 1e-8)
+    if scfg.kind == "top_k":
+        x = _top_k_mask(x, scfg.top_k)
+    elif scfg.kind == "top_p":
+        x = _top_p_mask(x, scfg.top_p)
+    keys = jax.random.wrap_key_data(key_data)           # (B,) key array
+    return jax.vmap(jax.random.categorical)(keys, x).astype(jnp.int32)
