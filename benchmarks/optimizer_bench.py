@@ -25,6 +25,7 @@ from __future__ import annotations
 import argparse
 import json
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,28 +52,75 @@ STACKED = {"embed": False,
            "unembed": False}
 
 
-def bench(opt, params, stacked, *, packed: bool, iters: int
-          ) -> tuple[float, int]:
-    """Returns (seconds/step, pallas launches/step)."""
-    grads = jax.tree_util.tree_map(lambda p: 0.01 * p, params)
-    state = opt.init(params, stacked=stacked if packed else None)
-    marker = None if packed else stacked  # packed states carry the layout
+class _Setup:
+    """One compiled, warmed (optimizer, layout) measurement target.
 
-    launches = count_pallas_launches(
-        lambda g, s, p: opt.update(g, s, p, stacked=marker),
-        grads, state, params)
+    The step donates state + params — what the train pipeline does
+    (``donate_argnums=(0,)`` on the TrainState) — so XLA may update the
+    packed slot buffers in place instead of double-buffering them.
+    """
 
-    @jax.jit
-    def step(g, s, p):
-        return opt.update(g, s, p, stacked=marker)
+    def __init__(self, opt, params, stacked, *, packed: bool):
+        self.grads = jax.tree_util.tree_map(lambda p: 0.01 * p, params)
+        # donation consumes the param buffers — work on a private copy so
+        # the caller's tree survives for the other setups
+        self.p = jax.tree_util.tree_map(jnp.copy, params)
+        self.s = opt.init(self.p, stacked=stacked if packed else None)
+        marker = None if packed else stacked  # packed states carry layout
+        self.launches = count_pallas_launches(
+            lambda g, s, p: opt.update(g, s, p, stacked=marker),
+            self.grads, self.s, self.p)
+        self.step = jax.jit(
+            lambda g, s, p: opt.update(g, s, p, stacked=marker),
+            donate_argnums=(1, 2))
+        self.p, self.s = self.step(self.grads, self.s, self.p)  # warmup
+        jax.block_until_ready(self.p)
+        self.best = float("inf")
 
-    p, s = step(grads, state, params)  # compile + warmup
-    jax.block_until_ready(p)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        p, s = step(grads, s, p)
-    jax.block_until_ready(p)
-    return (time.perf_counter() - t0) / iters, launches
+    def time_chunk(self, iters: int) -> float:
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            self.p, self.s = self.step(self.grads, self.s, self.p)
+        jax.block_until_ready(self.p)
+        dt = (time.perf_counter() - t0) / iters
+        self.best = min(self.best, dt)
+        return dt
+
+
+def bench_paths(opt_factory, params, stacked, *, paths, iters: int,
+                reps: int = 9
+                ) -> tuple[dict[str, tuple[float, int]],
+                           Optional[dict[str, float]]]:
+    """Per-path (best seconds/step, launches) + packed-vs-leaf ratio.
+
+    Reps are INTERLEAVED across paths and the asserted ratio is the MIN
+    over per-rep pairwise ratios (adjacent chunks see the same machine
+    load). See the inline comment for the sensitivity trade-off; the
+    MEDIAN pair ratio is also reported in the JSON for trend-watching
+    but is too noisy on shared runners to assert on."""
+    setups = {path: _Setup(opt_factory(), params, stacked,
+                           packed=(path == "flat-packed"))
+              for path in paths}
+    times: dict[str, list[float]] = {path: [] for path in paths}
+    for _ in range(reps):
+        for path, setup in setups.items():
+            times[path].append(setup.time_chunk(iters))
+    ratio = None
+    if "per-leaf" in times and "flat-packed" in times:
+        # Min over load-paired chunk ratios: scheduler noise on a shared
+        # runner corrupts individual pairs (either direction), but a
+        # STRUCTURAL packed-path regression — the 4x per-step-pack bug
+        # this estimator pins — inflates every pair, so the cleanest
+        # pair still reads it. Deliberately downward-biased (a spike on
+        # the per-leaf side of one pair deflates the min): trades
+        # sensitivity (catches >= ~2x, not 1.1x, under heavy noise) for
+        # a flake-free CI assertion. The median pair ratio rides along
+        # in the JSON for humans watching the trend.
+        pair = sorted(p / l for p, l in zip(times["flat-packed"],
+                                            times["per-leaf"]))
+        ratio = {"min_pair": pair[0],
+                 "median_pair": pair[len(pair) // 2]}
+    return {path: (s.best, s.launches) for path, s in setups.items()}, ratio
 
 
 def main() -> None:
@@ -82,7 +130,9 @@ def main() -> None:
                     help="JSON output path ('' to skip)")
     args = ap.parse_args()
     n_layers, d = (4, 128) if args.quick else (16, 512)
-    iters = 5 if args.quick else 20
+    # chunks must be long enough that per-chunk medians beat dispatch
+    # jitter on shared CI runners (the 1.5x assertion depends on it)
+    iters = 25 if args.quick else 20
 
     params = make_tree(n_layers, d, jax.random.key(0))
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
@@ -90,6 +140,7 @@ def main() -> None:
     print(f"# optimizer bench: {n:,} params, {n_leaves} leaves, "
           f"{iters} iters")
     records = []
+    ratios: dict[str, float] = {}
     for name, make in [
         ("sgd", lambda: sgd(0.01, momentum=0.9)),
         ("lars", lambda: lars(0.01)),
@@ -97,12 +148,15 @@ def main() -> None:
         ("lamb", lambda: lamb(0.001)),
         ("adamw", lambda: adamw(0.001)),
     ]:
-        for path in ("per-leaf", "flat-packed"):
-            if name == "lars+pallas" and path == "per-leaf":
-                continue  # the megakernels require the packed layout
-            dt, launches = bench(make(), params, STACKED,
-                                 packed=(path == "flat-packed"),
-                                 iters=iters)
+        # the megakernels require the packed layout
+        paths = (("flat-packed",) if name == "lars+pallas"
+                 else ("per-leaf", "flat-packed"))
+        timed, ratio = bench_paths(make, params, STACKED, paths=paths,
+                                   iters=iters)
+        if ratio is not None:
+            ratios[name] = ratio
+        for path in paths:
+            dt, launches = timed[path]
             records.append({"optimizer": name, "path": path,
                             "ms_per_step": dt * 1e3,
                             "pallas_launches": launches,
@@ -118,6 +172,23 @@ def main() -> None:
     print(f"LARS flat-packed vs per-leaf: "
           f"{(by[('lars', 'flat-packed')] / by[('lars', 'per-leaf')] - 1) * 100:+.1f}%")
 
+    # Perf contract (regression pin): the packed substrate keeps weights
+    # + slots resident in superbuffers, so on CPU the flat-packed path
+    # must stay within 1.5x of the per-leaf reference for EVERY
+    # optimizer. (lars+pallas is excluded: on CPU the Mosaic kernels run
+    # in interpret mode, which is a correctness path, not a perf path.)
+    if jax.default_backend() == "cpu":
+        for name, ratio in ratios.items():
+            assert ratio["min_pair"] <= 1.5, (
+                f"flat-packed {name} is {ratio['min_pair']:.2f}x the "
+                f"per-leaf path even in its cleanest load-paired sample "
+                f"(limit 1.5x) — packed-substrate perf regression "
+                f"(suspect: a per-step superbuffer pack crept back in)")
+        print("packed-vs-leaf ratios (min-pair <= 1.5x, median in "
+              "parens): " +
+              ", ".join(f"{k} {v['min_pair']:.2f}x ({v['median_pair']:.2f})"
+                        for k, v in ratios.items()))
+
     if args.out:
         payload = {
             "bench": "optimizer",
@@ -125,6 +196,7 @@ def main() -> None:
             "n_layers": n_layers, "d_model": d, "iters": iters,
             "backend": jax.default_backend(),
             "results": records,
+            "packed_vs_leaf_ratio": ratios,
         }
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2)

@@ -12,13 +12,16 @@ claims validated are the paper's *shape*:
   C3 LARS holds materially higher accuracy at large batch;
   C4 generalization error grows much faster for SGD than LARS.
 
-Every cell trains through the large-batch TrainPipeline, so the sweep
-can take ``--accum-steps`` (global batches beyond one-step memory) and
-``--precision bf16`` (f32 master weights). ``--accum-bench`` skips the
-accuracy sweep and instead measures the execution pipeline itself — a
-global batch 8x the largest single-step microbatch, steps/s and
-compiled peak-memory for f32 vs bf16 — appending the results to
-``BENCH_optimizer.json``.
+The sweep itself is a :class:`repro.experiments.GridSpec` executed by
+the experiment harness (``repro.experiments``): every cell trains
+through the large-batch TrainPipeline with in-jit trust-ratio
+telemetry, streams a JSONL trajectory into ``--workdir``, and is
+resumable mid-grid with ``--resume``. ``--accum-steps`` and
+``--precision bf16`` sweep under gradient accumulation / master
+weights. ``--accum-bench`` skips the accuracy sweep and instead
+measures the execution pipeline itself — a global batch 8x the largest
+single-step microbatch, steps/s and compiled peak-memory for f32 vs
+bf16 — appending the results to ``BENCH_optimizer.json``.
 
 Usage: PYTHONPATH=src python -m benchmarks.paper_sweep [--quick]
        PYTHONPATH=src python -m benchmarks.paper_sweep --accum-bench
@@ -28,7 +31,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import math
 import os
 import time
 
@@ -37,83 +39,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import lars, sgd, lamb
-from repro.core.scaling import scaled_lr
-from repro.data import batch_iterator, synthetic_mnist
+from repro.core import lars, schedules
+from repro.experiments import GridRunner, GridSpec, aggregate
+from repro.experiments.spec import (INIT_LR, LR_DECAY, MOMENTUM,
+                                    TRUST_COEF, WEIGHT_DECAY)
 from repro.models import build_model
-from repro.train import (TrainPipeline, generalization_error,
-                         make_eval_step)
-
-# Paper Table 1
-INIT_LR = 0.01
-LR_DECAY = 1e-4
-WEIGHT_DECAY = 1e-4
-MOMENTUM = 0.9
-TRUST_COEF = 0.001
-
-
-def make_opt(name: str, base_lr: float, *, trust_coef: float = TRUST_COEF,
-             lr_policy: str = "none", base_batch: int = 32, batch: int = 32):
-    from repro.core import schedules
-    lr0 = scaled_lr(base_lr, base_batch, batch, lr_policy)
-    lr = schedules.inverse_time_decay(lr0, LR_DECAY)
-    if name == "sgd":
-        return sgd(lr, momentum=MOMENTUM, weight_decay=WEIGHT_DECAY)
-    if name == "lars":
-        return lars(lr, momentum=MOMENTUM, weight_decay=WEIGHT_DECAY,
-                    trust_coefficient=trust_coef)
-    if name == "lamb":
-        return lamb(lr, weight_decay=WEIGHT_DECAY)
-    raise ValueError(name)
-
-
-def run_cell(opt_name: str, batch: int, *, epochs: int, data, seed: int = 0,
-             trust_coef: float = TRUST_COEF, lr_policy: str = "none",
-             base_lr: float = INIT_LR, accum_steps: int = 1,
-             precision: str = "f32") -> dict:
-    x_tr, y_tr, x_te, y_te = data
-    n = len(x_tr)
-    steps = max(1, math.ceil(epochs * n / batch))
-    cfg = get_config("lenet-mnist")
-    model = build_model(cfg)
-    opt = make_opt(opt_name, base_lr, trust_coef=trust_coef,
-                   lr_policy=lr_policy, batch=batch)
-    eff_batch = min(batch, n)
-    if eff_batch % accum_steps:
-        raise ValueError(f"batch {eff_batch} not divisible by "
-                         f"accum_steps={accum_steps}")
-    pipe = TrainPipeline(model, opt, cfg, accum_steps=accum_steps,
-                         precision=precision)
-    state = pipe.init_state(jax.random.key(seed))
-    eval_step = jax.jit(make_eval_step(model, cfg))
-
-    it = batch_iterator(x_tr, y_tr, batch=eff_batch, seed=seed)
-    t0 = time.perf_counter()
-    for i in range(steps):
-        b = next(it)
-        state, metrics = pipe(state, {"x": jnp.asarray(b["x"]),
-                                      "y": jnp.asarray(b["y"])})
-    loss = float(metrics["loss"])
-
-    def acc_of(x, y):
-        accs = []
-        for i in range(0, len(x), 1024):
-            m = eval_step(state.params, {"x": jnp.asarray(x[i:i + 1024]),
-                                         "y": jnp.asarray(y[i:i + 1024])})
-            accs.append(float(m["accuracy"]) * len(x[i:i + 1024]))
-        return sum(accs) / len(x)
-
-    train_acc = acc_of(x_tr, y_tr)
-    test_acc = acc_of(x_te, y_te)
-    return {"optimizer": opt_name, "batch": batch, "steps": steps,
-            "accum_steps": accum_steps, "precision": precision,
-            "loss": loss, "train_acc": round(train_acc, 4),
-            "test_acc": round(test_acc, 4),
-            "gen_error": round(generalization_error(train_acc, test_acc), 4),
-            "wall_s": round(time.perf_counter() - t0, 1)}
+from repro.train import TrainPipeline
 
 
 # ------------------------------------------------- execution-pipeline bench
+
+def _bench_opt():
+    """The sweep's LARS under Table-1 hyperparameters (bench workload)."""
+    return lars(schedules.inverse_time_decay(INIT_LR, LR_DECAY),
+                momentum=MOMENTUM, weight_decay=WEIGHT_DECAY,
+                trust_coefficient=TRUST_COEF)
+
 
 def accum_bench(*, micro_batch: int = 256, accum_steps: int = 8,
                 steps: int = 10, out: str = "BENCH_optimizer.json") -> dict:
@@ -133,9 +74,8 @@ def accum_bench(*, micro_batch: int = 256, accum_steps: int = 8,
              "y": jnp.asarray(rng.integers(0, 10, global_batch), jnp.int32)}
     rows = []
     for precision in ("f32", "bf16"):
-        opt = make_opt("lars", INIT_LR)
-        pipe = TrainPipeline(model, opt, cfg, accum_steps=accum_steps,
-                             precision=precision)
+        pipe = TrainPipeline(model, _bench_opt(), cfg,
+                             accum_steps=accum_steps, precision=precision)
         state = pipe.init_state(jax.random.key(0))
         peak = None
         try:
@@ -183,6 +123,8 @@ def accum_bench(*, micro_batch: int = 256, accum_steps: int = 8,
     return section
 
 
+# ----------------------------------------------------------------- sweep
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -195,7 +137,13 @@ def main() -> None:
                     choices=("none", "linear", "sqrt"))
     ap.add_argument("--base-lr", type=float, default=INIT_LR)
     ap.add_argument("--n-train", type=int, default=None)
-    ap.add_argument("--out", default=None)
+    ap.add_argument("--out", default=None,
+                    help="write the aggregated report JSON here")
+    ap.add_argument("--workdir", default=None,
+                    help="harness run directory (default "
+                    "runs/<sweep name>)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue an interrupted sweep in --workdir")
     ap.add_argument("--accum-steps", type=int, default=1,
                     help="microbatches accumulated per update in each cell")
     ap.add_argument("--precision", default="f32", choices=("f32", "bf16"))
@@ -214,48 +162,55 @@ def main() -> None:
 
     if args.quick:
         n_train, n_test = 2048, 512
-        batches = [64, 512, 2048]
+        batches = (64, 512, 2048)
         epochs = args.epochs or 6
     else:
         n_train, n_test = 8192, 2048
-        batches = [32, 128, 512, 1024, 2048, 4096, 8192]
+        batches = (32, 128, 512, 1024, 2048, 4096, 8192)
         epochs = args.epochs or 20
     if args.n_train:
         n_train = args.n_train
 
-    data = synthetic_mnist(n_train, n_test, seed=0)
-    rows = []
-    print(f"# paper sweep: epochs={epochs} n_train={n_train} "
-          f"optimizers={args.optimizers} lr_policy={args.lr_policy} "
-          f"trust_coef={args.trust_coef}")
+    grid = GridSpec(
+        name="paper_sweep_quick" if args.quick else "paper_sweep",
+        optimizers=tuple(args.optimizers), batches=batches,
+        precisions=(args.precision,), accum_steps=(args.accum_steps,),
+        lr_policies=(args.lr_policy,), epochs=epochs,
+        n_train=n_train, n_test=n_test, base_lr=args.base_lr,
+        trust_coef=args.trust_coef)
+    workdir = args.workdir or f"runs/{grid.name}"
+    if not args.resume and os.path.exists(
+            os.path.join(workdir, "manifest.json")):
+        # benchmark semantics: a fresh invocation re-measures (the
+        # harness CLI keeps the strict refuse-to-clobber behavior)
+        print(f"# discarding previous sweep in {workdir} "
+              "(pass --resume to continue it)")
+        import shutil
+        shutil.rmtree(workdir)
+    runner = GridRunner(grid, workdir, log=None)
+
+    print(f"# paper sweep via experiment harness: epochs={epochs} "
+          f"n_train={n_train} optimizers={args.optimizers} "
+          f"lr_policy={args.lr_policy} trust_coef={args.trust_coef} "
+          f"workdir={workdir}")
     print(f"{'opt':6s} {'batch':>6s} {'steps':>6s} {'train':>7s} "
           f"{'test':>7s} {'gen_err':>8s} {'wall':>6s}")
-    for batch in batches:
-        for opt_name in args.optimizers:
-            row = run_cell(opt_name, batch, epochs=epochs, data=data,
-                           trust_coef=args.trust_coef,
-                           lr_policy=args.lr_policy, base_lr=args.base_lr,
-                           accum_steps=args.accum_steps,
-                           precision=args.precision)
-            rows.append(row)
-            print(f"{row['optimizer']:6s} {row['batch']:6d} "
-                  f"{row['steps']:6d} {row['train_acc']:7.4f} "
-                  f"{row['test_acc']:7.4f} {row['gen_error']:8.4f} "
-                  f"{row['wall_s']:5.1f}s", flush=True)
+
+    def on_row(row: dict) -> None:
+        print(f"{row['optimizer']:6s} {row['batch']:6d} "
+              f"{row['steps']:6d} {row['train_acc']:7.4f} "
+              f"{row['test_acc']:7.4f} {row['gen_error']:8.4f} "
+              f"{row['wall_s']:5.1f}s", flush=True)
+
+    manifest = runner.run(resume=args.resume, on_row=on_row)
+    payload = aggregate(grid, manifest)
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump(rows, f, indent=1)
+        from repro.experiments.record import atomic_write_json
+        atomic_write_json(args.out, payload)
         print(f"wrote {args.out}")
 
-    # claim checks (only meaningful on the full sweep)
-    if not args.quick:
-        by = {(r["optimizer"], r["batch"]): r for r in rows}
-        largest = max(b for (_, b) in by)
-        small = min(b for (_, b) in by)
-        if ("lars", largest) in by and ("sgd", largest) in by:
-            c3 = by[("lars", largest)]["test_acc"] >= \
-                by[("sgd", largest)]["test_acc"]
-            print(f"C3 (LARS >= SGD test acc at batch {largest}): {c3}")
+    for key, val in payload["claims"].items():
+        print(f"claim {key}: {val}")
 
 
 if __name__ == "__main__":

@@ -1,38 +1,46 @@
 """The paper's experiment, end to end: train the §3.1 CNN on (synthetic)
 MNIST at a small and a large batch size with SGD and with LARS, and
 report test/train accuracy + generalization error — a scaled-down
-version of Figs 2-4 (the full sweep is ``benchmarks/paper_sweep.py``).
+version of Figs 2-4 (the full study is the experiment harness:
+``python -m repro.launch.experiment --grid lars_vs_sgd``).
 
 Run: PYTHONPATH=src python examples/large_batch_mnist.py
 """
 
 import os
 import sys
+import tempfile
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(
+    os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.paper_sweep import run_cell  # noqa: E402
-from repro.data import synthetic_mnist       # noqa: E402
+from repro.experiments import GridRunner, GridSpec  # noqa: E402
 
 
 def main() -> None:
-    data = synthetic_mnist(4096, 1024, seed=0)
     print(f"{'opt':6s} {'batch':>6s} {'accum':>6s} {'train':>7s} "
           f"{'test':>7s} {'gen_err':>8s}")
-    # the 1024 cell runs its global batch through 4 accumulated
-    # microbatches of 256 — the TrainPipeline path that lets the sweep
-    # exceed single-step device memory (optimizer update + LARS trust
-    # ratio still fire once per global batch).
-    for batch, accum in ((64, 1), (1024, 4)):
-        for opt in ("sgd", "lars"):
-            # the validated Protocol B (EXPERIMENTS.md §Paper-validation)
-            row = run_cell(opt, batch, epochs=12, data=data,
-                           trust_coef=0.02, lr_policy="linear",
-                           accum_steps=accum)
-            print(f"{row['optimizer']:6s} {row['batch']:6d} "
-                  f"{row['accum_steps']:6d} "
-                  f"{row['train_acc']:7.4f} {row['test_acc']:7.4f} "
-                  f"{row['gen_error']:8.4f}")
+
+    def on_row(row: dict) -> None:
+        print(f"{row['optimizer']:6s} {row['batch']:6d} "
+              f"{row['accum_steps']:6d} "
+              f"{row['train_acc']:7.4f} {row['test_acc']:7.4f} "
+              f"{row['gen_error']:8.4f}", flush=True)
+
+    # the validated protocol (EXPERIMENTS_lars_vs_sgd.json): identical
+    # tuning budget for both optimizers — linear LR scaling, trust
+    # coefficient 0.02. The 1024 cell runs its global batch through 4
+    # accumulated microbatches of 256 — the TrainPipeline path that lets
+    # the sweep exceed single-step device memory (optimizer update +
+    # LARS trust ratio still fire once per global batch).
+    with tempfile.TemporaryDirectory() as workdir:
+        for batch, accum in ((64, 1), (1024, 4)):
+            grid = GridSpec(name=f"example_b{batch}", batches=(batch,),
+                            accum_steps=(accum,), lr_policies=("linear",),
+                            trust_coef=0.02, epochs=12,
+                            n_train=4096, n_test=1024)
+            GridRunner(grid, os.path.join(workdir, grid.name),
+                       log=None, record_memory=False).run(on_row=on_row)
 
 
 if __name__ == "__main__":

@@ -39,8 +39,16 @@ def _flatten(tree: Pytree) -> dict[str, np.ndarray]:
 
 
 def save_checkpoint(path: str, tree: Pytree) -> None:
+    """Atomic write (tmp + rename): the experiment harness checkpoints
+    mid-cell and advertises kill-anywhere resumability — a kill landing
+    inside the write must not leave a torn npz that poisons every
+    subsequent restore."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path, **_flatten(tree))
+    if not path.endswith(".npz"):
+        path = path + ".npz"       # np.savez appends it anyway
+    tmp = path + ".tmp.npz"        # keep the suffix savez insists on
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
 
 
 def restore_checkpoint(path: str, target: Pytree) -> Pytree:

@@ -23,7 +23,7 @@ def adamw(learning_rate: float | Schedule = 1e-3, *, b1: float = 0.9,
 
     rule = LayerwiseRule(name="adamw", slots=("mu", "nu"),
                          direction=direction, apply=apply, trust=None,
-                         prepare=prepare)
+                         prepare=prepare, needs_grad_sq=True)
     return make_optimizer(rule, learning_rate,
                           hyperparams=dict(learning_rate=learning_rate,
                                            b1=b1, b2=b2,

@@ -11,12 +11,16 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import trust_ratio as tr
 from repro.core.optim_base import normalize_stacked
 from repro.treepath import path_str
 
 Pytree = Any
+
+
+STATS = ("w_norm", "g_norm", "ratio_wg", "trust_ratio")
 
 
 def layer_stats(params: Pytree, grads: Pytree, *,
@@ -41,3 +45,46 @@ def layer_stats(params: Pytree, grads: Pytree, *,
             "trust_ratio": trust,
         }
     return out
+
+
+def stats_hook(*, eta: float = 0.001, weight_decay: float = 1e-4):
+    """A :class:`~repro.train.pipeline.TrainPipeline` ``stats_fn``.
+
+    The returned callable runs INSIDE the jitted step on the mean
+    gradient of the global batch, so per-step telemetry costs no extra
+    host round-trips — the table rides back in the metrics pytree and is
+    only transferred when the consumer (the experiment recorder) reads
+    it. ``eta``/``weight_decay`` should match the optimizer under
+    study so the logged trust ratios are the ratios LARS applies.
+    """
+
+    def fn(params: Pytree, grads: Pytree, stacked: Optional[Pytree]):
+        return layer_stats(params, grads, eta=eta,
+                           weight_decay=weight_decay, stacked=stacked)
+
+    return fn
+
+
+def summarize(stats: dict[str, dict[str, Any]]) -> dict[str, float]:
+    """Compress a :func:`layer_stats` table to scalar telemetry.
+
+    Host-side (one device_get of a few dozen scalars): min/max/mean
+    trust ratio across layer slices plus global weight/grad norms —
+    the per-step numbers the experiment trajectories stream. The full
+    per-layer table is recorded separately at the final step.
+    """
+    stats = jax.device_get(stats)
+    trust = np.concatenate([np.atleast_1d(np.asarray(v["trust_ratio"],
+                                                     np.float64))
+                            for v in stats.values()])
+    w_sq = sum(float(np.sum(np.square(np.asarray(v["w_norm"], np.float64))))
+               for v in stats.values())
+    g_sq = sum(float(np.sum(np.square(np.asarray(v["g_norm"], np.float64))))
+               for v in stats.values())
+    return {
+        "trust_min": float(trust.min()),
+        "trust_max": float(trust.max()),
+        "trust_mean": float(trust.mean()),
+        "w_norm_global": float(np.sqrt(w_sq)),
+        "g_norm_global": float(np.sqrt(g_sq)),
+    }

@@ -36,7 +36,7 @@ def lamb(learning_rate: float | Schedule = 1e-3, *, b1: float = 0.9,
 
     rule = LayerwiseRule(name="lamb", slots=("mu", "nu"),
                          direction=direction, apply=apply, trust=trust,
-                         prepare=prepare,
+                         prepare=prepare, needs_grad_sq=True,
                          skip_adaptation_1d=skip_adaptation_1d)
     return make_optimizer(rule, learning_rate,
                           hyperparams=dict(learning_rate=learning_rate,

@@ -71,6 +71,7 @@ def lars(learning_rate: float | Schedule = 0.01, *, momentum: float = 0.9,
     rule = LayerwiseRule(name="lars", slots=("momentum",),
                          direction=direction, apply=apply, trust=trust,
                          skip_adaptation_1d=skip_adaptation_1d,
+                         trust_operand_is_grad=True,
                          packed_norms=packed_norms,
                          packed_apply=packed_apply)
     return make_optimizer(rule, learning_rate, use_pallas=use_pallas,

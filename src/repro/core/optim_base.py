@@ -97,6 +97,17 @@ class LayerwiseRule:
     prepare: Optional[Callable[[jnp.ndarray], dict]] = None
     # rank<=1 slices (biases, norm scales) keep trust ratio 1.
     skip_adaptation_1d: bool = True
+    # True when ``direction`` returns the raw gradient untouched (LARS):
+    # the packed engine may then take the trust-operand norms from the
+    # unpacked gradient tree (per-leaf reductions that fuse with the
+    # gradient pack) instead of a second full pass over the superbuffer.
+    trust_operand_is_grad: bool = False
+    # True when ``direction`` consumes g^2 as well as g (Adam family).
+    # The packed engine then supplies ``ctx["grad_sq"]`` as a SECOND
+    # packed buffer (squares packed from the tree): each concat has one
+    # consumer, so XLA:CPU fuses both packs into the moment updates
+    # instead of materializing a shared gradient buffer read twice.
+    needs_grad_sq: bool = False
     # Optional Pallas megakernel overrides for the packed engine (used
     # when the optimizer is built with use_pallas=True). The engine owns
     # trust/adapt-mask logic either way; these swap only the two
@@ -172,7 +183,8 @@ def _tree_update(rule: LayerwiseRule, lr, ctx: dict, grads: Pytree,
 def _packed_update(rule: LayerwiseRule, layout: packing.PackedLayout, lr,
                    ctx: dict, grads: Pytree, slots: dict, params: Pytree,
                    use_pallas: bool,
-                   master: Optional[jnp.ndarray] = None
+                   master: Optional[jnp.ndarray] = None,
+                   weights: Optional[jnp.ndarray] = None
                    ) -> tuple[Pytree, dict]:
     """Flat-packed engine: whole-pytree buffers, per-slice scalars.
 
@@ -184,16 +196,36 @@ def _packed_update(rule: LayerwiseRule, layout: packing.PackedLayout, lr,
     per-step params pack is skipped — the master IS the weight buffer —
     and the updated master is returned in the slot dict; params come back
     as the unpacked (storage-dtype) view of the new master.
+
+    ``weights``: optional persistent packed weight buffer (the no-master
+    counterpart, ``WEIGHT_SLOT``). Also skips the per-step params pack,
+    but the updated buffer is quantized through each segment's storage
+    dtype so trajectories stay bit-identical to repacking every step.
+    Only one of ``master`` / ``weights`` may be given.
     """
-    wbuf = master if master is not None else packing.pack(layout, params)
+    if master is not None:
+        wbuf = master
+    elif weights is not None:
+        wbuf = weights
+    else:
+        wbuf = packing.pack(layout, params)
     gbuf = packing.pack(layout, grads)
+    if rule.needs_grad_sq:
+        # square in f32 (pack would cast AFTER the square, and a bf16
+        # square then diverges from the tree engine's f32 one)
+        ctx = dict(ctx, grad_sq=packing.pack(
+            layout, tree_map(
+                lambda g: jnp.square(g.astype(jnp.float32)), grads)))
     u, slots = rule.direction(ctx, gbuf, wbuf, dict(slots))
     ratio = None
     if rule.trust is not None:
-        norms_fn = (rule.packed_norms
-                    if use_pallas and rule.packed_norms is not None
-                    else packing.slice_norms)
-        w_norm, u_norm = norms_fn(layout, wbuf, u)
+        if use_pallas and rule.packed_norms is not None:
+            w_norm, u_norm = rule.packed_norms(layout, wbuf, u)
+        elif rule.trust_operand_is_grad:
+            w_norm = jnp.sqrt(packing.slice_sumsq(layout, wbuf))
+            u_norm = jnp.sqrt(packing.tree_slice_sumsq(layout, grads))
+        else:
+            w_norm, u_norm = packing.slice_norms(layout, wbuf, u)
         ratio = rule.trust(ctx, w_norm, u_norm)
         if rule.skip_adaptation_1d:
             ratio = jnp.where(packing.adapt_mask(layout), ratio, 1.0)
@@ -206,9 +238,13 @@ def _packed_update(rule: LayerwiseRule, layout: packing.PackedLayout, lr,
         local_lr = lr if ratio is None \
             else lr * packing.rows_expand(layout, ratio)
         wbuf2, new_slots = rule.apply(ctx, wbuf, gbuf, u, local_lr, slots)
-    new_params = packing.unpack(layout, wbuf2)
     if master is not None:
         new_slots[packing.MASTER_SLOT] = wbuf2
+    else:
+        wbuf2 = packing.quantize_to_storage(layout, wbuf2)
+        if weights is not None:
+            new_slots[packing.WEIGHT_SLOT] = wbuf2
+    new_params = packing.unpack(layout, wbuf2)
     return new_params, new_slots
 
 
@@ -235,6 +271,11 @@ def make_optimizer(rule: LayerwiseRule, learning_rate: float | Schedule, *,
         slots = {k: zeros() for k in rule.slots}
         if master:
             slots[packing.MASTER_SLOT] = packing.init_master(layout, params)
+        else:
+            # weights live packed across steps (the no-master analogue of
+            # the master buffer): update() never repacks params, it reads
+            # and writes this slot. See packing.WEIGHT_SLOT.
+            slots[packing.WEIGHT_SLOT] = packing.pack(layout, params)
         return OptState(step=step, slots=slots, layout=layout)
 
     def update(grads: Pytree, state: OptState, params: Pytree,
@@ -244,12 +285,13 @@ def make_optimizer(rule: LayerwiseRule, learning_rate: float | Schedule, *,
         ctx = rule.prepare(state.step) if rule.prepare is not None else {}
         slots = dict(state.slots)
         master = slots.pop(packing.MASTER_SLOT, None)
+        weights = slots.pop(packing.WEIGHT_SLOT, None)
         if state.layout is not None:
             if stacked is not None:
                 packing.check_marker(state.layout, params, stacked)
             new_params, new_slots = _packed_update(
                 rule, state.layout, lr, ctx, grads, slots, params,
-                use_pallas, master=master)
+                use_pallas, master=master, weights=weights)
         else:
             if use_pallas:
                 raise ValueError(
@@ -284,7 +326,11 @@ def adam_moments(b1: float, b2: float, eps: float, weight_decay: float
 
     def direction(ctx, g, w, slots):
         mu = b1 * slots["mu"] + (1 - b1) * g
-        nu = b2 * slots["nu"] + (1 - b2) * jnp.square(g)
+        # grad_sq: packed-engine fusion hint (g^2 packed from the tree,
+        # one consumer per concat); elementwise-identical to squaring g.
+        gsq = ctx.get("grad_sq")
+        nu = b2 * slots["nu"] + (1 - b2) * (
+            jnp.square(g) if gsq is None else gsq)
         u = (mu / ctx["c1"]) / (jnp.sqrt(nu / ctx["c2"]) + eps) \
             + weight_decay * w
         return u, {"mu": mu, "nu": nu}

@@ -66,6 +66,16 @@ BLOCK_ROWS = 8    # sublane rows per kernel block; slices are block-aligned
 # for the next forward pass.
 MASTER_SLOT = "master"
 
+# Reserved OptState slot name for the persistent packed weight buffer kept
+# when NO master exists (f32 precision policy). Same mechanism as the
+# master — the weights live packed across steps so the per-step params
+# pack disappears — but the buffer is quantized through each segment's
+# storage dtype after every update (``quantize_to_storage``), so the
+# trajectory stays bit-identical to the repack-every-step path. Distinct
+# from MASTER_SLOT so a bf16-policy checkpoint still fails loudly when
+# restored into an f32-policy template (and vice versa).
+WEIGHT_SLOT = "packed_weights"
+
 
 @dataclasses.dataclass(frozen=True)
 class Segment:
@@ -230,16 +240,31 @@ def _replicate_in_mesh(x: jnp.ndarray) -> jnp.ndarray:
 
 
 def pack(layout: PackedLayout, tree: Pytree) -> jnp.ndarray:
-    """Pytree -> (total_rows, lane) f32 superbuffer (zero padded)."""
+    """Pytree -> (total_rows, lane) f32 superbuffer (zero padded).
+
+    Built as ONE flat concatenate: unstacked leaves contribute
+    (flat values, zero tail) parts directly, so only stacked leaves with
+    interleaved per-layer padding pay an intermediate padded copy. This
+    is the per-step hot path for gradients (params/slots stay packed
+    across steps), so one avoided copy matters on CPU.
+    """
     leaves = layout.treedef.flatten_up_to(tree)
     parts = []
     for seg, leaf in zip(layout.segments, leaves):
         flat = jnp.asarray(leaf).astype(jnp.float32).reshape(seg.layers, -1)
         padded = seg.rows * layout.lane
-        if padded != seg.n:
-            flat = jnp.pad(flat, ((0, 0), (0, padded - seg.n)))
-        parts.append(flat.reshape(seg.layers * seg.rows, layout.lane))
-    return _replicate_in_mesh(jnp.concatenate(parts, axis=0))
+        if padded == seg.n:
+            parts.append(flat.reshape(-1))
+        elif seg.layers == 1:
+            parts.append(flat.reshape(-1))
+            parts.append(jnp.zeros((padded - seg.n,), jnp.float32))
+        else:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros((seg.layers, padded - seg.n),
+                                 jnp.float32)], axis=1)
+            parts.append(flat.reshape(-1))
+    buf = jnp.concatenate(parts).reshape(layout.total_rows, layout.lane)
+    return _replicate_in_mesh(buf)
 
 
 def init_master(layout: PackedLayout, params: Pytree) -> jnp.ndarray:
@@ -250,6 +275,29 @@ def init_master(layout: PackedLayout, params: Pytree) -> jnp.ndarray:
     low-precision params while the optimizer state keeps full precision.
     """
     return pack(layout, params)
+
+
+def quantize_to_storage(layout: PackedLayout, buf: jnp.ndarray
+                        ) -> jnp.ndarray:
+    """Round each segment's rows through its storage dtype (in f32).
+
+    Keeping the weight buffer packed across steps (``WEIGHT_SLOT``) must
+    not change numerics relative to repacking the storage-dtype params
+    every step: a bf16 leaf's weights are rounded to bf16 between steps
+    on that path. This applies exactly that cast chain
+    (f32 -> storage -> f32) segment-wise; all-f32 layouts are a no-op.
+    Zero padding is preserved (0 is exact in every float dtype).
+    """
+    lowp = [seg for seg in layout.segments if seg.dtype != "float32"]
+    if not lowp:
+        return buf
+    for seg in lowp:
+        rows = seg.layers * seg.rows
+        block = jax.lax.slice(buf, (seg.row_offset, 0),
+                              (seg.row_offset + rows, layout.lane))
+        block = block.astype(seg.dtype).astype(jnp.float32)
+        buf = jax.lax.dynamic_update_slice(buf, block, (seg.row_offset, 0))
+    return buf
 
 
 def unpack(layout: PackedLayout, buf: jnp.ndarray,
@@ -285,6 +333,23 @@ def slice_norms(layout: PackedLayout, a: jnp.ndarray, b: jnp.ndarray
     """Joint per-slice L2 norms of two superbuffers; (num_slices,) each."""
     return (jnp.sqrt(slice_sumsq(layout, a)),
             jnp.sqrt(slice_sumsq(layout, b)))
+
+
+def tree_slice_sumsq(layout: PackedLayout, tree: Pytree) -> jnp.ndarray:
+    """(num_slices,) f32 sum of squares computed from the UNPACKED tree.
+
+    Same values as ``slice_sumsq(layout, pack(layout, tree))`` (up to
+    f32 summation order), but the per-leaf reductions fuse with whatever
+    else reads those leaves (e.g. the gradient pack in the same jitted
+    step) instead of forcing a second full pass over the superbuffer —
+    measurably cheaper on CPU for the LARS norm phase.
+    """
+    leaves = layout.treedef.flatten_up_to(tree)
+    parts = []
+    for seg, leaf in zip(layout.segments, leaves):
+        flat = jnp.asarray(leaf).astype(jnp.float32).reshape(seg.layers, -1)
+        parts.append(jnp.sum(jnp.square(flat), axis=1))
+    return jnp.concatenate(parts)
 
 
 def rows_expand(layout: PackedLayout, per_slice: jnp.ndarray) -> jnp.ndarray:

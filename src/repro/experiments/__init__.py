@@ -1,0 +1,21 @@
+"""Paper-reproduction experiment harness.
+
+The declarative pipeline the repo's studies report through:
+
+* :mod:`repro.experiments.spec`   — grids as data (axes x protocol),
+  deterministic per-cell seeding, named registry;
+* :mod:`repro.experiments.runner` — cells through TrainPipeline with
+  in-jit trust-ratio telemetry, warm-started compilation, and
+  mid-grid/mid-cell resume via npz checkpoints;
+* :mod:`repro.experiments.record` — streamed JSONL trajectories;
+* :mod:`repro.experiments.report` — accuracy-vs-batch aggregation +
+  the paper's claim checks (``EXPERIMENTS_<grid>.json``).
+"""
+
+from repro.experiments.spec import (CellSpec, GridSpec, GRIDS,  # noqa: F401
+                                    get_grid)
+from repro.experiments.runner import GridRunner  # noqa: F401
+from repro.experiments.record import (TrajectoryRecorder,  # noqa: F401
+                                      read_trajectory)
+from repro.experiments.report import (aggregate, format_table,  # noqa: F401
+                                      write_report)

@@ -1,0 +1,125 @@
+"""Structured JSONL trajectory recording for experiment cells.
+
+One line per training step::
+
+    {"step": 0, "loss": 2.41, "aux_loss": 0.0,
+     "trust": {"trust_min": ..., "trust_max": ..., ...},
+     "wall_s": 0.41}
+
+Everything except ``wall_s`` is a pure function of (grid, cell) — the
+golden/resume tests compare trajectories with timing keys stripped via
+:func:`read_trajectory`. Records are flushed line-by-line so a killed
+sweep leaves a readable prefix, and :func:`truncate_trajectory` rewinds
+a partial file to the step a restored checkpoint corresponds to.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+# Per-record keys that are NOT deterministic functions of the cell spec
+# (compared runs strip these).
+TIMING_KEYS = ("wall_s",)
+
+
+def to_jsonable(x: Any) -> Any:
+    """Device arrays / numpy scalars -> plain JSON values (recursive)."""
+    if isinstance(x, dict):
+        return {k: to_jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [to_jsonable(v) for v in x]
+    if isinstance(x, (str, bool, int, float)) or x is None:
+        return x
+    arr = np.asarray(jax.device_get(x))
+    if arr.ndim == 0:
+        return arr.item()
+    return arr.tolist()
+
+
+class TrajectoryRecorder:
+    """Append-only JSONL writer with per-record flush."""
+
+    def __init__(self, path: str, *, append: bool = False):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self.path = path
+        self._f = open(path, "a" if append else "w")
+
+    def record(self, entry: dict) -> None:
+        self._f.write(json.dumps(to_jsonable(entry)) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def read_trajectory(path: str, *, strip_timing: bool = False
+                    ) -> list[dict]:
+    """Load a JSONL trajectory; ``strip_timing`` drops the wall-clock
+    keys so two runs of the same cell compare exactly equal."""
+    records = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            if strip_timing:
+                for key in TIMING_KEYS:
+                    rec.pop(key, None)
+            records.append(rec)
+    return records
+
+
+def truncate_trajectory(path: str, *, keep_below_step: int) -> int:
+    """Drop records at/after ``keep_below_step`` (resume rewinds to the
+    last checkpoint; the re-run steps re-record identically). Returns
+    the number of records kept. Tolerates a torn final line from a
+    kill mid-write."""
+    if not os.path.exists(path):
+        return 0
+    kept = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                break  # torn tail from an interrupted write
+            if rec.get("step", -1) >= keep_below_step:
+                break
+            kept.append(line)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        for line in kept:
+            f.write(line + "\n")
+    os.replace(tmp, path)
+    return len(kept)
+
+
+def atomic_write_json(path: str, payload: Any) -> None:
+    """Crash-safe JSON write (manifest updates between cells)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def load_json(path: str) -> Optional[Any]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)

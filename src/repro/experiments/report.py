@@ -1,0 +1,102 @@
+"""Aggregation: completed-cell rows -> the paper's accuracy-vs-batch
+table + claim checks, written as ``EXPERIMENTS_<grid>.json``.
+
+Mirrors the paper's Figures 2-4: final test accuracy, train accuracy
+and generalization error per (optimizer, global batch), averaged over
+replicate seeds, plus the claim checks the repo tracks:
+
+  C1 both optimizers are comparable at small batch;
+  C3 LARS holds >= SGD test accuracy at the largest batch;
+  C4 SGD's generalization error grows faster than LARS's.
+"""
+
+from __future__ import annotations
+
+import statistics
+from typing import Optional
+
+from repro.experiments.record import atomic_write_json
+from repro.experiments.spec import GridSpec
+
+
+def _mean(vals: list[float]) -> float:
+    return round(statistics.fmean(vals), 4)
+
+
+def aggregate(grid: GridSpec, manifest: dict) -> dict:
+    """Manifest (possibly partial) -> report payload."""
+    rows = [manifest["cells"][c.cell_id] for c in grid.cells()
+            if c.cell_id in manifest["cells"]]
+    by_cell: dict[tuple[str, int], list[dict]] = {}
+    for row in rows:
+        by_cell.setdefault((row["optimizer"], row["batch"]), []).append(row)
+
+    table: dict[str, dict[str, dict[str, float]]] = {}
+    for (opt, batch), group in sorted(by_cell.items(),
+                                      key=lambda kv: (kv[0][1], kv[0][0])):
+        table.setdefault(str(batch), {})[opt] = {
+            "test_acc": _mean([r["test_acc"] for r in group]),
+            "train_acc": _mean([r["train_acc"] for r in group]),
+            "gen_error": _mean([r["gen_error"] for r in group]),
+            "replicates": len(group),
+        }
+
+    claims = _claims(table)
+    slim_rows = [{k: v for k, v in row.items() if k != "layer_stats"}
+                 for row in rows]
+    return {
+        "grid": grid.fingerprint(),
+        "completed_cells": len(rows),
+        "total_cells": len(grid.cells()),
+        "accuracy_vs_batch": table,
+        "claims": claims,
+        "rows": slim_rows,
+    }
+
+
+def _claims(table: dict) -> dict:
+    out: dict = {}
+    batches = sorted(int(b) for b in table)
+    both = [b for b in batches
+            if {"sgd", "lars"} <= set(table[str(b)])]
+    if not both:
+        return out
+    small, large = both[0], both[-1]
+    t = lambda b, o, k: table[str(b)][o][k]  # noqa: E731
+    out["smallest_batch"] = small
+    out["largest_batch"] = large
+    out["C1_comparable_at_small_batch"] = bool(
+        abs(t(small, "lars", "test_acc") - t(small, "sgd", "test_acc"))
+        <= 0.05)
+    out["lars_test_acc_at_largest"] = t(large, "lars", "test_acc")
+    out["sgd_test_acc_at_largest"] = t(large, "sgd", "test_acc")
+    out["C3_lars_ge_sgd_at_largest_batch"] = bool(
+        t(large, "lars", "test_acc") >= t(large, "sgd", "test_acc"))
+    if small != large:
+        sgd_growth = t(large, "sgd", "gen_error") - t(small, "sgd",
+                                                      "gen_error")
+        lars_growth = t(large, "lars", "gen_error") - t(small, "lars",
+                                                        "gen_error")
+        out["C4_sgd_gen_error_grows_faster"] = bool(
+            sgd_growth >= lars_growth)
+    return out
+
+
+def write_report(path: str, grid: GridSpec, manifest: dict,
+                 backend: Optional[str] = None) -> dict:
+    payload = aggregate(grid, manifest)
+    if backend is not None:
+        payload["backend"] = backend
+    atomic_write_json(path, payload)
+    return payload
+
+
+def format_table(payload: dict) -> str:
+    """Human-readable accuracy-vs-batch table for CLI output."""
+    lines = [f"{'batch':>7s} {'opt':6s} {'train':>7s} {'test':>7s} "
+             f"{'gen_err':>8s}"]
+    for batch in sorted(payload["accuracy_vs_batch"], key=int):
+        for opt, m in sorted(payload["accuracy_vs_batch"][batch].items()):
+            lines.append(f"{batch:>7s} {opt:6s} {m['train_acc']:7.4f} "
+                         f"{m['test_acc']:7.4f} {m['gen_error']:8.4f}")
+    return "\n".join(lines)

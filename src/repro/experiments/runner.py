@@ -1,0 +1,276 @@
+"""Grid execution: every cell through TrainPipeline, resumable mid-grid.
+
+Layout of a run directory::
+
+    out_dir/
+      manifest.json              # grid fingerprint + completed-cell rows
+      <cell_id>/trajectory.jsonl # one record per optimizer step
+      <cell_id>/state.npz        # mid-cell checkpoint (deleted when done)
+
+Resume contract (``run(resume=True)``):
+
+* completed cells (present in the manifest) are skipped outright;
+* a cell with a ``state.npz`` restores the full TrainState via
+  :mod:`repro.checkpoint.npz`, rewinds its JSONL to the checkpointed
+  step, fast-forwards the (seeded) batch iterator, and continues —
+  the completed trajectory is IDENTICAL to an uninterrupted run
+  (pinned by tests/test_experiments.py);
+* the manifest's grid fingerprint must match the requested grid, so a
+  stale directory cannot silently mix protocols.
+
+Warm-started compilation: cells sharing a ``pipeline_key`` (same traced
+step — everything but the replicate seed) reuse one TrainPipeline, and
+one jitted eval step serves the whole grid; replicate cells therefore
+pay zero recompilation.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_train_state, save_train_state
+from repro.configs import get_config
+from repro.core import grad_stats
+from repro.data import batch_iterator, synthetic_mnist
+from repro.experiments.record import (TrajectoryRecorder, atomic_write_json,
+                                      load_json, truncate_trajectory)
+from repro.experiments.spec import CellSpec, GridSpec
+from repro.models import build_model
+from repro.train import TrainPipeline, generalization_error, make_eval_step
+
+# Test hook: abort the sweep (KeyboardInterrupt) after N recorded steps,
+# as if the process had been killed mid-grid. Exercised by the resume
+# tests both in-process and through the CLI.
+ABORT_ENV = "REPRO_EXPERIMENT_ABORT_AFTER_STEPS"
+
+
+class GridRunner:
+    """Executes a :class:`GridSpec` cell by cell into ``out_dir``."""
+
+    def __init__(self, grid: GridSpec, out_dir: str, *,
+                 checkpoint_every: int = 25, collect_stats: bool = True,
+                 record_memory: bool = True,
+                 log: Optional[Callable[[str], None]] = print):
+        cfg = get_config(grid.arch)
+        if cfg.family != "cnn":
+            raise ValueError(
+                f"experiment harness currently drives the paper's CNN "
+                f"study only (got arch {grid.arch!r}, family "
+                f"{cfg.family!r}); LM-family sweep cells are a ROADMAP "
+                "item")
+        self.grid = grid
+        self.out_dir = out_dir
+        self.checkpoint_every = checkpoint_every
+        self.collect_stats = collect_stats
+        self.record_memory = record_memory
+        self.log = log or (lambda _line: None)
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self._eval_step = jax.jit(make_eval_step(self.model, cfg))
+        self._pipelines: dict[tuple, TrainPipeline] = {}
+        self._data = None
+        self._steps_done = 0
+        abort = os.environ.get(ABORT_ENV)
+        self._abort_after = int(abort) if abort else None
+
+    # ----------------------------------------------------------- pieces
+
+    @property
+    def manifest_path(self) -> str:
+        return os.path.join(self.out_dir, "manifest.json")
+
+    def cell_dir(self, cell: CellSpec) -> str:
+        return os.path.join(self.out_dir, cell.cell_id)
+
+    def data(self):
+        if self._data is None:
+            self._data = synthetic_mnist(self.grid.n_train,
+                                         self.grid.n_test,
+                                         seed=self.grid.data_seed)
+        return self._data
+
+    def pipeline(self, cell: CellSpec) -> TrainPipeline:
+        key = cell.pipeline_key()
+        if key not in self._pipelines:
+            stats_fn = None
+            if self.collect_stats:
+                stats_fn = grad_stats.stats_hook(
+                    eta=cell.trust_coef, weight_decay=cell.weight_decay)
+            self._pipelines[key] = TrainPipeline(
+                self.model, cell.build_optimizer(), self.cfg,
+                accum_steps=cell.accum_steps, precision=cell.precision,
+                donate=False, stats_fn=stats_fn)
+        return self._pipelines[key]
+
+    def _load_manifest(self, resume: bool) -> dict:
+        manifest = load_json(self.manifest_path)
+        if manifest is None:
+            return {"grid": self.grid.fingerprint(), "cells": {}}
+        if manifest.get("grid") != self.grid.fingerprint():
+            raise ValueError(
+                f"{self.manifest_path} was written by a different grid "
+                "definition; refusing to mix protocols (use a fresh "
+                "--out-dir or delete the stale run)")
+        if not resume:
+            raise ValueError(
+                f"{self.out_dir} already holds a run of this grid; pass "
+                "resume=True (--resume) to continue it or use a fresh "
+                "out_dir")
+        return manifest
+
+    def _tick(self) -> None:
+        self._steps_done += 1
+        if self._abort_after is not None \
+                and self._steps_done >= self._abort_after:
+            raise KeyboardInterrupt(
+                f"{ABORT_ENV}={self._abort_after} reached")
+
+    # ------------------------------------------------------------- cells
+
+    def run_cell(self, cell: CellSpec, *, resume: bool = False) -> dict:
+        """Train one cell to completion; returns its summary row."""
+        x_tr, y_tr, x_te, y_te = self.data()
+        steps = cell.steps
+        eff_batch = min(cell.batch, len(x_tr))
+        if eff_batch % cell.accum_steps:
+            raise ValueError(
+                f"cell {cell.cell_id}: effective batch {eff_batch} not "
+                f"divisible by accum_steps={cell.accum_steps}")
+        pipe = self.pipeline(cell)
+        cell_seed = cell.cell_seed()
+        state = pipe.init_state(jax.random.key(cell_seed))
+
+        cdir = self.cell_dir(cell)
+        traj_path = os.path.join(cdir, "trajectory.jsonl")
+        ckpt_path = os.path.join(cdir, "state.npz")
+        start = 0
+        if resume and os.path.exists(ckpt_path):
+            state = restore_train_state(ckpt_path, state)
+            start = int(jax.device_get(state.opt_state.step))
+            kept = truncate_trajectory(traj_path, keep_below_step=start)
+            assert kept == start, (
+                f"trajectory {traj_path} holds {kept} records below the "
+                f"checkpointed step {start} — corrupted run directory")
+            self.log(f"  resumed {cell.cell_id} at step {start}/{steps}")
+        elif os.path.isdir(cdir):
+            shutil.rmtree(cdir)  # partial cell without checkpoint: redo
+
+        recorder = TrajectoryRecorder(traj_path, append=start > 0)
+        it = batch_iterator(x_tr, y_tr, batch=eff_batch, seed=cell_seed)
+        for _ in range(start):
+            next(it)  # replay the stream to the checkpointed step
+
+        t0 = time.perf_counter()
+        metrics: dict = {}
+        try:
+            for i in range(start, steps):
+                b = next(it)
+                state, metrics = pipe(state, {
+                    "x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])})
+                entry = {"step": i, "loss": float(metrics["loss"]),
+                         "aux_loss": float(metrics["aux_loss"])}
+                if "stats" in metrics:
+                    entry["trust"] = grad_stats.summarize(metrics["stats"])
+                entry["wall_s"] = round(time.perf_counter() - t0, 3)
+                recorder.record(entry)
+                done = i + 1
+                if self.checkpoint_every and done < steps \
+                        and done % self.checkpoint_every == 0:
+                    save_train_state(ckpt_path, state)
+                self._tick()
+        finally:
+            recorder.close()
+
+        row = dict(cell.to_json())
+        row.update(self._evaluate(cell, state))
+        row.update(steps=steps, loss=float(metrics["loss"]),
+                   wall_s=round(time.perf_counter() - t0, 1))
+        if "stats" in metrics:
+            # full per-layer trust/norm table at the final step
+            row["layer_stats"] = {
+                layer: {k: np.asarray(jax.device_get(v)).tolist()
+                        for k, v in table.items()}
+                for layer, table in metrics["stats"].items()}
+            row["trust_final"] = grad_stats.summarize(metrics["stats"])
+        if self.record_memory:
+            row["peak_bytes"] = self._peak_bytes(pipe, eff_batch)
+        if os.path.exists(ckpt_path):
+            os.remove(ckpt_path)  # completed cells resume via manifest
+        return row
+
+    def _evaluate(self, cell: CellSpec, state) -> dict:
+        x_tr, y_tr, x_te, y_te = self.data()
+
+        def acc_of(x, y, chunk: int = 1024) -> float:
+            total = 0.0
+            for i in range(0, len(x), chunk):
+                m = self._eval_step(state.params,
+                                    {"x": jnp.asarray(x[i:i + chunk]),
+                                     "y": jnp.asarray(y[i:i + chunk])})
+                total += float(m["accuracy"]) * len(x[i:i + chunk])
+            return total / len(x)
+
+        train_acc = acc_of(x_tr, y_tr)
+        test_acc = acc_of(x_te, y_te)
+        return {"train_acc": round(train_acc, 4),
+                "test_acc": round(test_acc, 4),
+                "gen_error": round(
+                    generalization_error(train_acc, test_acc), 4)}
+
+    def _peak_bytes(self, pipe: TrainPipeline, eff_batch: int
+                    ) -> Optional[int]:
+        """Compiled peak memory of the cell's step (cached per pipeline;
+        None on backends without memory analysis)."""
+        if getattr(pipe, "_peak_bytes", "miss") != "miss":
+            return pipe._peak_bytes
+        peak = None
+        try:
+            batch = {"x": jnp.zeros((eff_batch, 28, 28, 1), jnp.float32),
+                     "y": jnp.zeros((eff_batch,), jnp.int32)}
+            state = pipe.init_state(jax.random.key(0))
+            mem = pipe.lower(state, batch).compile().memory_analysis()
+            peak = int(mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                       + mem.output_size_in_bytes)
+        except Exception:
+            pass
+        pipe._peak_bytes = peak
+        return peak
+
+    # -------------------------------------------------------------- grid
+
+    def run(self, *, resume: bool = False,
+            cell_ids: Optional[list[str]] = None,
+            on_row: Optional[Callable[[dict], None]] = None) -> dict:
+        """Run (the selected subset of) the grid; returns the manifest.
+
+        ``cell_ids`` restricts execution (``--cell``); completed cells
+        are recorded in the manifest as they finish, so a kill at any
+        point leaves a resumable directory.
+        """
+        manifest = self._load_manifest(resume)
+        atomic_write_json(self.manifest_path, manifest)
+        cells = self.grid.cells()
+        if cell_ids is not None:
+            wanted = set(cell_ids)
+            unknown = wanted - {c.cell_id for c in cells}
+            if unknown:
+                raise KeyError(f"unknown cell ids {sorted(unknown)}")
+            cells = [c for c in cells if c.cell_id in wanted]
+        for cell in cells:
+            if cell.cell_id in manifest["cells"]:
+                self.log(f"  [done] {cell.cell_id}")
+                continue
+            self.log(f"  [run ] {cell.cell_id} ({cell.steps} steps)")
+            row = self.run_cell(cell, resume=resume)
+            manifest["cells"][cell.cell_id] = row
+            atomic_write_json(self.manifest_path, manifest)
+            if on_row is not None:
+                on_row(row)
+        return manifest

@@ -1,0 +1,119 @@
+"""Experiment CLI: run a declarative grid end to end, resumably.
+
+Examples::
+
+  # the CI smoke study (2x2: sgd/lars x small/large batch)
+  PYTHONPATH=src python -m repro.launch.experiment --grid lars_vs_sgd_smoke
+
+  # the full paper sweep, interruptible and resumable mid-grid
+  PYTHONPATH=src python -m repro.launch.experiment --grid lars_vs_sgd
+  PYTHONPATH=src python -m repro.launch.experiment --grid lars_vs_sgd --resume
+
+  # one cell only (debugging / sharding work across machines)
+  PYTHONPATH=src python -m repro.launch.experiment --grid lars_vs_sgd \
+      --cell lars-b8192-f32-a1-linear-s0
+
+The run directory (``--out-dir``, default ``runs/<grid>``) holds the
+manifest and one JSONL trajectory per cell; the aggregated report
+(accuracy-vs-batch table + claim checks) is written to ``--out``
+(default ``EXPERIMENTS_<grid>.json``) after every invocation, from
+whatever cells have completed so far.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro.experiments import (GRIDS, GridRunner, format_table, get_grid,
+                               write_report)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", choices=sorted(GRIDS),
+                    help="named grid from the registry")
+    ap.add_argument("--list-grids", action="store_true",
+                    help="print the registry (name, cells, axes) and exit")
+    ap.add_argument("--list-cells", action="store_true",
+                    help="print the grid's cell ids and exit")
+    ap.add_argument("--out-dir", default=None,
+                    help="run directory (default runs/<grid>)")
+    ap.add_argument("--out", default=None,
+                    help="aggregated report path (default "
+                    "EXPERIMENTS_<grid>.json)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue an interrupted run of this grid "
+                    "(skips completed cells, restores mid-cell "
+                    "checkpoints)")
+    ap.add_argument("--cell", action="append", default=None,
+                    metavar="CELL_ID", help="run only this cell "
+                    "(repeatable)")
+    ap.add_argument("--checkpoint-every", type=int, default=25,
+                    help="steps between mid-cell TrainState checkpoints "
+                    "(0 disables; resume then restarts the cell)")
+    ap.add_argument("--no-stats", action="store_true",
+                    help="skip the in-jit per-layer trust-ratio "
+                    "telemetry")
+    ap.add_argument("--epochs", type=int, default=None,
+                    help="override the grid's epoch budget")
+    ap.add_argument("--n-train", type=int, default=None,
+                    help="override the grid's train-set size")
+    ap.add_argument("--seeds", type=int, nargs="+", default=None,
+                    help="override the grid's replicate seeds")
+    args = ap.parse_args(argv)
+
+    if args.list_grids:
+        for name in sorted(GRIDS):
+            g = GRIDS[name]
+            print(f"{name}: {len(g.cells())} cells  "
+                  f"optimizers={list(g.optimizers)} "
+                  f"batches={list(g.batches)} epochs={g.epochs}")
+        return 0
+    if not args.grid:
+        ap.error("--grid is required (or --list-grids)")
+
+    overrides = {}
+    if args.epochs is not None:
+        overrides["epochs"] = args.epochs
+    if args.n_train is not None:
+        overrides["n_train"] = args.n_train
+    if args.seeds is not None:
+        overrides["seeds"] = tuple(args.seeds)
+    grid = get_grid(args.grid, **overrides)
+
+    if args.list_cells:
+        for cell in grid.cells():
+            print(f"{cell.cell_id}  ({cell.steps} steps)")
+        return 0
+
+    out_dir = args.out_dir or f"runs/{grid.name}"
+    out = args.out or f"EXPERIMENTS_{grid.name}.json"
+    runner = GridRunner(grid, out_dir,
+                        checkpoint_every=args.checkpoint_every,
+                        collect_stats=not args.no_stats)
+    print(f"# grid {grid.name}: {len(grid.cells())} cells -> {out_dir} "
+          f"(backend={jax.default_backend()})")
+    interrupted = False
+    try:
+        manifest = runner.run(resume=args.resume, cell_ids=args.cell)
+    except KeyboardInterrupt:
+        from repro.experiments.record import load_json
+        manifest = load_json(runner.manifest_path)
+        interrupted = True
+        print("interrupted — rerun with --resume to continue", flush=True)
+
+    payload = write_report(out, grid, manifest,
+                           backend=jax.default_backend())
+    print(f"# report ({payload['completed_cells']}/"
+          f"{payload['total_cells']} cells) -> {out}")
+    print(format_table(payload))
+    for key, val in payload["claims"].items():
+        print(f"claim {key}: {val}")
+    return 130 if interrupted else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -108,7 +108,8 @@ class TrainPipeline:
 
     def __init__(self, model, optimizer, cfg=None, *, accum_steps: int = 1,
                  precision: str | Precision = "f32", mesh=None,
-                 donate: bool = True, packed: bool = True):
+                 donate: bool = True, packed: bool = True,
+                 stats_fn: Optional[Callable] = None):
         if accum_steps < 1:
             raise ValueError(f"accum_steps must be >= 1, got {accum_steps}")
         self.model = model
@@ -119,6 +120,12 @@ class TrainPipeline:
         self.mesh = mesh
         self.donate = donate
         self.packed = packed
+        # optional per-step telemetry computed INSIDE the jitted step on
+        # (params, mean grads, stacked marker) — e.g. the per-layer
+        # trust-ratio table from repro.core.grad_stats.stats_hook. The
+        # result rides back under metrics["stats"] as device arrays; no
+        # host sync happens unless the caller reads them.
+        self.stats_fn = stats_fn
         # stacked marker from an eval_shape trace: never allocates params
         shapes = jax.eval_shape(model.init, jax.random.key(0))
         marker_fn = getattr(model, "stacked_marker", None)
@@ -164,6 +171,7 @@ class TrainPipeline:
         optimizer, stacked = self.optimizer, self._stacked
         k = self.accum_steps
         compute_dtype = self.precision.compute_dtype
+        stats_fn = self.stats_fn
 
         def step(state: TrainState, batch) -> tuple[TrainState, dict]:
             batch = cast_floats(batch, compute_dtype)
@@ -208,6 +216,8 @@ class TrainPipeline:
                 grads, state.opt_state, state.params, stacked=stacked)
             metrics = {"loss": loss, "aux_loss": aux_loss,
                        "step": new_opt.step}
+            if stats_fn is not None:
+                metrics["stats"] = stats_fn(state.params, grads, stacked)
             return TrainState(new_params, new_opt), metrics
 
         return step

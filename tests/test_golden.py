@@ -1,0 +1,219 @@
+"""Golden-trajectory regression pins.
+
+Seeded LeNet/MNIST runs for sgd and lars at two batch sizes: the first
+20 step losses and the final per-layer trust-ratio table are pinned in
+``tests/golden/*.json``. Any numeric drift in the optimizer substrate,
+the packing layout, or the train pipeline trips these immediately —
+while legitimate protocol changes regenerate them explicitly::
+
+    PYTHONPATH=src python tests/test_golden.py --regen
+
+The suite asserts the pins under the CURRENT device count in-process,
+and re-execs itself under 1 AND 8 forced host devices (subprocess, same
+pattern as tests/test_pipeline.py) so both device-count regimes are
+pinned. Under 8 devices the lars/b128 run additionally goes through a
+(8, 1) data-parallel mesh and must track the same golden within a
+looser tolerance. A deliberate 1e-3 lr perturbation must FAIL the
+tolerance (sanity-checked as its own test: the pin has teeth).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import grad_stats, lars, sgd
+from repro.data import batch_iterator, synthetic_mnist
+from repro.models import build_model
+from repro.train import TrainPipeline
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+RUNS = [("sgd", 32), ("sgd", 128), ("lars", 32), ("lars", 128)]
+STEPS = 20
+LR = 0.05
+TRUST_COEF = 0.01
+WEIGHT_DECAY = 1e-4
+# Tolerances are per batch size, placed from measurement: the b32 runs
+# are bit-stable across forced host device counts (<= 2e-7 relative
+# drift — the small convs never split across the CPU client's thread
+# partitions), while the b128 runs see ~2.6e-3 loss / ~5e-3 trust-ratio
+# drift between 1 and 8 forced devices (different intra-op reduction
+# partitioning, compounded over 20 steps). The 1e-3 lr perturbation
+# moves b32 lars losses 1.6e-3 — an order of magnitude above the tight
+# tolerance, so the pin keeps teeth where it is tightest.
+RTOLS = {32: 1e-4, 128: 5e-3}
+# Trust ratios divide by the grad norm, so once a run trains hard (sgd
+# at b128 reaches loss 1.6 by step 20) the ratio amplifies the same
+# thread-partitioning noise to a few percent — 10% still catches any
+# real norm/packing regression (those shift ratios by factors).
+TRUST_RTOLS = {32: 1e-3, 128: 0.1}
+ATOL = 1e-6
+# Data-parallel mesh run (b128): cross-device reduction order differs.
+MESH_RTOL = 5e-3
+MESH_TRUST_RTOL = 0.1
+RTOL = RTOLS[32]           # the tight pin the perturbation test probes
+
+
+def _golden_path(opt_name: str, batch: int) -> str:
+    return os.path.join(GOLDEN_DIR, f"{opt_name}_b{batch}.json")
+
+
+def _make_opt(opt_name: str, lr: float = LR):
+    if opt_name == "sgd":
+        return sgd(lr, momentum=0.9, weight_decay=WEIGHT_DECAY)
+    return lars(lr, momentum=0.9, weight_decay=WEIGHT_DECAY,
+                trust_coefficient=TRUST_COEF)
+
+
+def run_trajectory(opt_name: str, batch: int, *, lr: float = LR,
+                   mesh=None) -> dict:
+    """The pinned workload: 20 seeded steps, losses + final trust table."""
+    cfg = get_config("lenet-mnist")
+    model = build_model(cfg)
+    stats_fn = grad_stats.stats_hook(eta=TRUST_COEF,
+                                     weight_decay=WEIGHT_DECAY)
+    pipe = TrainPipeline(model, _make_opt(opt_name, lr), cfg,
+                         donate=False, mesh=mesh, stats_fn=stats_fn)
+    state = pipe.init_state(jax.random.key(7))
+    x_tr, y_tr, _, _ = synthetic_mnist(256, 8, seed=0)
+    it = batch_iterator(x_tr, y_tr, batch=batch, seed=0)
+    losses = []
+    metrics = {}
+    for _ in range(STEPS):
+        b = next(it)
+        state, metrics = pipe(state, {"x": jnp.asarray(b["x"]),
+                                      "y": jnp.asarray(b["y"])})
+        losses.append(float(metrics["loss"]))
+    # pin trust ratios of ADAPTED layers only (rank > 1): a bias's raw
+    # ratio divides by a near-zero grad norm — hypersensitive fp noise
+    # for a quantity LARS never applies (skip_adaptation_1d)
+    from repro.treepath import path_str
+    ranks = {path_str(p): np.ndim(leaf) for p, leaf in
+             jax.tree_util.tree_leaves_with_path(state.params)}
+    trust = {layer: np.atleast_1d(
+                 np.asarray(jax.device_get(t["trust_ratio"]),
+                            np.float64)).tolist()
+             for layer, t in metrics["stats"].items()
+             if ranks[layer] > 1}
+    return {"meta": {"steps": STEPS, "lr": lr, "batch": batch,
+                     "optimizer": opt_name, "trust_coef": TRUST_COEF,
+                     "weight_decay": WEIGHT_DECAY},
+            "losses": losses, "final_trust": trust}
+
+
+def _compare(got: dict, golden: dict, *, rtol: float, label: str,
+             trust_rtol: float) -> None:
+    np.testing.assert_allclose(
+        got["losses"], golden["losses"], rtol=rtol, atol=ATOL,
+        err_msg=f"{label}: step-loss trajectory drifted from golden")
+    assert set(got["final_trust"]) == set(golden["final_trust"]), label
+    for layer, vals in golden["final_trust"].items():
+        np.testing.assert_allclose(
+            got["final_trust"][layer], vals, rtol=trust_rtol, atol=ATOL,
+            err_msg=f"{label}: final trust ratio of {layer} drifted")
+
+
+def _load_golden(opt_name: str, batch: int) -> dict:
+    path = _golden_path(opt_name, batch)
+    assert os.path.exists(path), \
+        f"missing golden {path} — run `python tests/test_golden.py --regen`"
+    with open(path) as f:
+        return json.load(f)
+
+
+# -------------------------------------------------------------- pytest
+
+@pytest.mark.parametrize("opt_name,batch", RUNS)
+def test_golden_trajectory(opt_name, batch):
+    got = run_trajectory(opt_name, batch)
+    _compare(got, _load_golden(opt_name, batch), rtol=RTOLS[batch],
+             trust_rtol=TRUST_RTOLS[batch], label=f"{opt_name}/b{batch}")
+
+
+def test_lr_perturbation_breaks_the_pin():
+    """A 1e-3 lr perturbation must exceed the tolerance by step 20 —
+    otherwise the pin could not catch a real optimizer regression."""
+    golden = _load_golden("lars", 32)
+    got = run_trajectory("lars", 32, lr=LR + 1e-3)
+    rel = np.abs(np.asarray(got["losses"]) - np.asarray(golden["losses"])) \
+        / np.abs(np.asarray(golden["losses"]))
+    assert rel.max() > 10 * RTOL, (
+        f"lr+1e-3 only moved losses by {rel.max():.2e} relative — the "
+        f"{RTOL} tolerance has no teeth")
+    with pytest.raises(AssertionError):
+        _compare(got, golden, rtol=RTOL, trust_rtol=TRUST_RTOLS[32],
+                 label="perturbed")
+
+
+_SUBPROC_MARKER = "REPRO_GOLDEN_SUBPROC"
+
+
+@pytest.mark.parametrize("devices", [1, 8])
+def test_golden_under_forced_device_count(devices):
+    """Re-exec the full check under N forced host devices (plus the
+    8-device data-parallel mesh variant) — golden trajectories must hold
+    in every device-count regime."""
+    if os.environ.get(_SUBPROC_MARKER):
+        pytest.skip("already in subprocess")
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+        PYTHONPATH=os.pathsep.join(sys.path),
+        **{_SUBPROC_MARKER: "1"})
+    out = subprocess.run([sys.executable, __file__, "--check"], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+# ----------------------------------------------------- regen / subproc
+
+def _check_main() -> int:
+    failures = []
+    for opt_name, batch in RUNS:
+        got = run_trajectory(opt_name, batch)
+        try:
+            _compare(got, _load_golden(opt_name, batch),
+                     rtol=RTOLS[batch], trust_rtol=TRUST_RTOLS[batch],
+                     label=f"{opt_name}/b{batch}")
+            print(f"ok {opt_name}/b{batch}")
+        except AssertionError as e:
+            failures.append(f"{opt_name}/b{batch}: {e}")
+    if len(jax.devices()) >= 8:
+        mesh = jax.make_mesh((8, 1), ("data", "model"))
+        got = run_trajectory("lars", 128, mesh=mesh)
+        try:
+            _compare(got, _load_golden("lars", 128), rtol=MESH_RTOL,
+                     trust_rtol=MESH_TRUST_RTOL,
+                     label="lars/b128 on (8,1) mesh")
+            print("ok lars/b128 on (8,1) mesh")
+        except AssertionError as e:
+            failures.append(f"lars/b128 mesh: {e}")
+    for f in failures:
+        print("FAIL", f)
+    return 1 if failures else 0
+
+
+def _regen_main() -> int:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for opt_name, batch in RUNS:
+        got = run_trajectory(opt_name, batch)
+        with open(_golden_path(opt_name, batch), "w") as f:
+            json.dump(got, f, indent=1)
+        print(f"wrote {_golden_path(opt_name, batch)} "
+              f"(final loss {got['losses'][-1]:.4f})")
+    return 0
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        sys.exit(_regen_main())
+    if "--check" in sys.argv:
+        sys.exit(_check_main())
+    print(__doc__)
+    sys.exit(2)

@@ -1,0 +1,137 @@
+"""Property-based tests for the optimizer substrate (hypothesis when
+installed, deterministic single examples otherwise — see
+tests/_hypothesis_compat.py).
+
+Pinned invariants:
+
+* the LARS trust ratio is scale-invariant to a SIMULTANEOUS rescaling of
+  params and grads (eta*c||w|| / (c||g|| + wd*c||w||) cancels c);
+* from zero momentum, one LARS/SGD update is positively homogeneous in
+  the learning rate (the trust ratio does not depend on lr, so the
+  applied step scales linearly) — on both engines;
+* pack -> unpack round-trips arbitrary leaf shape mixes bit-exactly,
+  including the f32 master-weight buffer (``MASTER_SLOT``).
+"""
+
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.core import lars, packing, sgd  # noqa: E402
+from repro.core import trust_ratio as tr  # noqa: E402
+from repro.core.optim_base import normalize_stacked  # noqa: E402
+
+tree_map = jax.tree_util.tree_map
+tree_leaves = jax.tree_util.tree_leaves
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape,
+                                     jnp.float32)
+
+
+# ------------------------------------------------------------ trust ratio
+
+@settings(max_examples=25, deadline=None)
+@given(c=st.floats(min_value=0.125, max_value=64.0),
+       seed=st.integers(min_value=0, max_value=2**16),
+       stacked=st.sampled_from([False, True]))
+def test_trust_ratio_scale_invariant_to_joint_rescaling(c, seed, stacked):
+    shape = (3, 7, 11) if stacked else (13, 5)
+    w = _rand(seed, shape)
+    g = _rand(seed + 1, shape, scale=0.1)
+    wn, gn = tr.layer_norms(w, g, stacked)
+    wns, gns = tr.layer_norms(c * w, c * g, stacked)
+    base = tr.lars_trust_ratio(wn, gn, eta=0.001, weight_decay=1e-4)
+    scaled = tr.lars_trust_ratio(wns, gns, eta=0.001, weight_decay=1e-4)
+    np.testing.assert_allclose(np.asarray(scaled), np.asarray(base),
+                               rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(c=st.floats(min_value=0.25, max_value=16.0),
+       # lr bounded away from 0: the asserted delta must stay well above
+       # f32 rounding of w' (|w' - w| >> eps * |w|)
+       lr=st.floats(min_value=0.01, max_value=0.5),
+       opt_name=st.sampled_from(["lars", "sgd"]),
+       packed=st.sampled_from([False, True]))
+def test_first_update_positively_homogeneous_in_lr(c, lr, opt_name,
+                                                   packed):
+    """delta(c * lr) == c * delta(lr) from zero momentum, both engines."""
+    params = {"w": _rand(0, (9, 6)), "stack": _rand(1, (3, 4, 5)),
+              "b": _rand(2, (7,))}
+    stacked = {"w": False, "stack": True, "b": False}
+    grads = tree_map(lambda p: 0.1 * p + 0.01, params)
+    make = lars if opt_name == "lars" else sgd
+
+    def delta(rate):
+        opt = make(float(rate))
+        state = opt.init(params, stacked=stacked if packed else None)
+        new, _ = opt.update(grads, state, params,
+                            stacked=None if packed else stacked)
+        return tree_map(lambda a, b: np.asarray(a) - np.asarray(b),
+                        new, params)
+
+    d1, dc = delta(lr), delta(c * lr)
+    for a, b in zip(tree_leaves(d1), tree_leaves(dc)):
+        # rtol bounded by f32 cancellation in (w' - w) for small steps
+        np.testing.assert_allclose(b, c * a, rtol=1e-3, atol=1e-7)
+
+
+# ----------------------------------------------------------- pack/unpack
+
+def _mixed_tree(seed: int, n_extra_dim: int, bf16: bool):
+    """A shape zoo: scalar, vector, matrix, layer stack, odd sizes that
+    force intra-slice padding, and optionally a bf16 leaf."""
+    ex = (n_extra_dim,) if n_extra_dim else ()
+    tree = {
+        "scalar": jnp.asarray(float(seed % 97), jnp.float32),
+        "vec": _rand(seed, (1 + seed % 23,)),
+        "mat": _rand(seed + 1, (5 + seed % 13, 3) + ex),
+        "stack": _rand(seed + 2, (2 + seed % 3, 4, 3 + seed % 7)),
+        "odd": _rand(seed + 3, (513,)),   # > one lane row
+    }
+    if bf16:
+        tree["half"] = (_rand(seed + 4, (6, 130)) * 0.1
+                        ).astype(jnp.bfloat16)
+    marker = {k: k == "stack" for k in tree}
+    return tree, marker
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16),
+       n_extra_dim=st.integers(min_value=0, max_value=4),
+       bf16=st.sampled_from([True, False]))
+def test_pack_unpack_roundtrip_bit_exact(seed, n_extra_dim, bf16):
+    tree, marker = _mixed_tree(seed, n_extra_dim, bf16)
+    layout = packing.build_layout(tree, normalize_stacked(tree, marker))
+    out = packing.unpack(layout, packing.pack(layout, tree))
+    for a, b in zip(tree_leaves(tree), tree_leaves(out)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        # bit-exact: compare raw byte patterns, not approximate values
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16),
+       bf16=st.sampled_from([True, False]))
+def test_master_slot_roundtrips_storage_params_bit_exact(seed, bf16):
+    """The f32 master buffer unpacks back to the exact storage-dtype
+    params it was seeded from (bf16 -> f32 -> bf16 is lossless), and
+    quantize_to_storage is idempotent on an already-quantized buffer."""
+    tree, marker = _mixed_tree(seed, 0, bf16)
+    layout = packing.build_layout(tree, normalize_stacked(tree, marker))
+    master = packing.init_master(layout, tree)
+    assert master.dtype == jnp.float32
+    out = packing.unpack(layout, master)
+    for a, b in zip(tree_leaves(tree), tree_leaves(out)):
+        assert a.dtype == b.dtype
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+    quant = packing.quantize_to_storage(layout, master)
+    assert np.asarray(quant).tobytes() == np.asarray(master).tobytes()
