@@ -4,6 +4,7 @@ and a sharding-aware host loader.
 """
 
 from repro.data.mnist import synthetic_mnist  # noqa: F401
-from repro.data.tokens import token_batches, TokenTaskConfig  # noqa: F401
+from repro.data.tokens import (token_batches, token_eval_set,  # noqa: F401
+                               TokenTaskConfig)
 from repro.data.loader import (ShardedLoader, Prefetcher,  # noqa: F401
                                batch_iterator)

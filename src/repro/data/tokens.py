@@ -1,13 +1,23 @@
 """Synthetic token-LM data: a learnable k-th-order Markov source.
 
-The LM-pretraining examples and integration tests need a corpus with real
-(learnable) structure so that loss decreasing is a meaningful signal. We
-sample from a sparse random transition table over a Zipfian vocabulary:
-each (prev token) row has ``branching`` successors with Dirichlet weights.
-A model that learns the table reaches entropy << log(V); random guessing
-sits at log(V).
+The LM-pretraining examples, the LM experiment cells, and the
+integration tests need a corpus with real (learnable) structure so that
+loss decreasing is a meaningful signal. We sample from a sparse random
+transition table over a Zipfian vocabulary: each (prev token) row has
+``branching`` successors with Dirichlet weights. A model that learns the
+table reaches entropy << log(V); random guessing sits at log(V).
 
-Host-side numpy, deterministic given seed.
+Host-side numpy, deterministic given seed. Two properties the experiment
+harness leans on:
+
+* the stream is a pure function of ``(cfg, batch, seq_len, seed)`` —
+  two iterators with the same coordinates yield byte-identical batches;
+* ``token_batches(..., start=k)`` fast-forwards to batch ``k`` by
+  replaying the rng draws WITHOUT the transition-table work (the cumsum
+  / gather per step is the expensive part), so mid-cell resume rebuilds
+  the exact stream position cheaply and stays byte-identical to an
+  uninterrupted run (pinned by the fast-forward and LM resume tests in
+  tests/test_experiments.py).
 """
 
 from __future__ import annotations
@@ -34,21 +44,55 @@ def _table(cfg: TokenTaskConfig) -> tuple[np.ndarray, np.ndarray]:
     return succ, probs
 
 
+def _sample_batch(rng: np.random.Generator, cfg: TokenTaskConfig,
+                  succ: np.ndarray, probs: np.ndarray, *, batch: int,
+                  seq_len: int) -> np.ndarray:
+    out = np.empty((batch, seq_len + 1), np.int32)
+    cur = rng.integers(0, cfg.vocab_size, size=batch)
+    out[:, 0] = cur
+    for t in range(1, seq_len + 1):
+        u = rng.random(batch)
+        cdf = np.cumsum(probs[cur], axis=1)
+        choice = np.minimum((u[:, None] > cdf).sum(axis=1),
+                            cfg.branching - 1)
+        cur = succ[cur, choice]
+        out[:, t] = cur
+    return out
+
+
+def _skip_batches(rng: np.random.Generator, cfg: TokenTaskConfig, *,
+                  batch: int, seq_len: int, n: int) -> None:
+    """Advance ``rng`` past ``n`` batches by making the IDENTICAL draws
+    (same methods, same sizes, same order as :func:`_sample_batch`)
+    while skipping the transition-table lookups. The generator state
+    after skipping k batches equals the state after sampling k batches,
+    so a fast-forwarded stream continues byte-identically."""
+    for _ in range(n):
+        rng.integers(0, cfg.vocab_size, size=batch)
+        for _ in range(seq_len):
+            rng.random(batch)
+
+
 def token_batches(cfg: TokenTaskConfig, *, batch: int, seq_len: int,
-                  seed: int = 0):
+                  seed: int = 0, start: int = 0):
     """Infinite iterator of (tokens (B, S+1) int32) — model trains on
-    tokens[:, :-1] -> tokens[:, 1:]."""
+    tokens[:, :-1] -> tokens[:, 1:]. ``start`` fast-forwards to batch
+    index ``start`` (mid-cell resume) without generating the skipped
+    batches."""
     succ, probs = _table(cfg)
     rng = np.random.default_rng(seed ^ 0x5EED)
+    if start:
+        _skip_batches(rng, cfg, batch=batch, seq_len=seq_len, n=start)
     while True:
-        out = np.empty((batch, seq_len + 1), np.int32)
-        cur = rng.integers(0, cfg.vocab_size, size=batch)
-        out[:, 0] = cur
-        for t in range(1, seq_len + 1):
-            u = rng.random(batch)
-            cdf = np.cumsum(probs[cur], axis=1)
-            choice = np.minimum((u[:, None] > cdf).sum(axis=1),
-                                cfg.branching - 1)
-            cur = succ[cur, choice]
-            out[:, t] = cur
-        yield out
+        yield _sample_batch(rng, cfg, succ, probs, batch=batch,
+                            seq_len=seq_len)
+
+
+def token_eval_set(cfg: TokenTaskConfig, *, n: int, seq_len: int,
+                   seed: int = 1) -> np.ndarray:
+    """A fixed held-out (n, S+1) int32 array from the SAME transition
+    table as the training stream but a disjoint rng stream — the
+    experiment harness's eval-perplexity set."""
+    succ, probs = _table(cfg)
+    rng = np.random.default_rng((seed ^ 0x5EED) + 0x0E_7A1)
+    return _sample_batch(rng, cfg, succ, probs, batch=n, seq_len=seq_len)

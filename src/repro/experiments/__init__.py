@@ -2,14 +2,17 @@
 
 The declarative pipeline the repo's studies report through:
 
-* :mod:`repro.experiments.spec`   — grids as data (axes x protocol),
-  deterministic per-cell seeding, named registry;
+* :mod:`repro.experiments.spec`   — grids as data (axes x protocol,
+  CNN and token-LM families), deterministic per-cell seeding, named
+  registry;
 * :mod:`repro.experiments.runner` — cells through TrainPipeline with
   in-jit trust-ratio telemetry, warm-started compilation, and
-  mid-grid/mid-cell resume via npz checkpoints;
+  mid-grid/mid-cell resume via npz checkpoints (+ token-iterator
+  fast-forward for LM cells);
 * :mod:`repro.experiments.record` — streamed JSONL trajectories;
-* :mod:`repro.experiments.report` — accuracy-vs-batch aggregation +
-  the paper's claim checks (``EXPERIMENTS_<grid>.json``).
+* :mod:`repro.experiments.report` — accuracy-vs-batch (CNN) /
+  perplexity-vs-batch (LM) aggregation + the studies' claim checks
+  (``EXPERIMENTS_<study>.json``).
 """
 
 from repro.experiments.spec import (CellSpec, GridSpec, GRIDS,  # noqa: F401

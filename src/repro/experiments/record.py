@@ -23,8 +23,9 @@ import jax
 import numpy as np
 
 # Per-record keys that are NOT deterministic functions of the cell spec
-# (compared runs strip these).
-TIMING_KEYS = ("wall_s",)
+# (compared runs strip these): wall clock and the LM cells' token
+# throughput derived from it.
+TIMING_KEYS = ("wall_s", "tokens_per_s")
 
 
 def to_jsonable(x: Any) -> Any:

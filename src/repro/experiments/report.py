@@ -1,13 +1,28 @@
-"""Aggregation: completed-cell rows -> the paper's accuracy-vs-batch
-table + claim checks, written as ``EXPERIMENTS_<grid>.json``.
+"""Aggregation: completed-cell rows -> the study's metric-vs-batch
+table + claim checks, written as the grid's report file
+(``EXPERIMENTS_<study>.json``).
 
-Mirrors the paper's Figures 2-4: final test accuracy, train accuracy
-and generalization error per (optimizer, global batch), averaged over
-replicate seeds, plus the claim checks the repo tracks:
+CNN grids mirror the paper's Figures 2-4: final test accuracy, train
+accuracy and generalization error per (optimizer, global batch),
+averaged over replicate seeds, plus the claim checks the repo tracks:
 
   C1 both optimizers are comparable at small batch;
   C3 LARS holds >= SGD test accuracy at the largest batch;
   C4 SGD's generalization error grows faster than LARS's.
+
+LM grids (the paper's §6 future work, run through the same protocol)
+report eval perplexity per (optimizer, global batch) and the
+layer-wise-vs-generic claim checks at matched batch:
+
+  L1 the four optimizers are comparable at the smallest batch
+     (within 25% relative perplexity of the best);
+  L2 LAMB holds <= AdamW eval perplexity at the largest batch
+     (the trust ratio earns its keep where AdamW's fixed rate
+     destabilizes);
+  L3 LARS holds <= SGD eval perplexity at the largest batch;
+  L4 the best layer-wise optimizer beats the best generic one at the
+     largest batch (the Nado et al. question, answered empirically at
+     this scale).
 """
 
 from __future__ import annotations
@@ -23,38 +38,60 @@ def _mean(vals: list[float]) -> float:
     return round(statistics.fmean(vals), 4)
 
 
+# Per-family metric schema: (table key, row metric columns, the headline
+# metric, whether lower is better).
+FAMILY_METRICS = {
+    "cnn": ("accuracy_vs_batch",
+            ("test_acc", "train_acc", "gen_error"), "test_acc", False),
+    "lm": ("perplexity_vs_batch",
+           ("eval_ppl", "eval_loss", "eval_acc"), "eval_ppl", True),
+}
+
+
 def aggregate(grid: GridSpec, manifest: dict) -> dict:
-    """Manifest (possibly partial) -> report payload."""
+    """Manifest (possibly partial) -> report payload.
+
+    Rows group by (optimizer, batch) and average over replicate seeds.
+    When the grid varies the lr-schedule axis (the warmup ablation),
+    the schedule joins the optimizer label (``lars@poly_warmup``) so
+    ablation cells stay separate columns instead of being averaged
+    into fake replicates — the pair claims then need the plain labels
+    and are skipped, which is correct: an ablation grid answers a
+    different question."""
+    table_key, columns, headline, lower_better = FAMILY_METRICS[grid.family]
+    multi_sched = len(set(grid.lr_schedules)) > 1
     rows = [manifest["cells"][c.cell_id] for c in grid.cells()
             if c.cell_id in manifest["cells"]]
     by_cell: dict[tuple[str, int], list[dict]] = {}
     for row in rows:
-        by_cell.setdefault((row["optimizer"], row["batch"]), []).append(row)
+        label = row["optimizer"]
+        if multi_sched:
+            label += "@" + row.get("lr_schedule", "inverse_time")
+        by_cell.setdefault((label, row["batch"]), []).append(row)
 
     table: dict[str, dict[str, dict[str, float]]] = {}
     for (opt, batch), group in sorted(by_cell.items(),
                                       key=lambda kv: (kv[0][1], kv[0][0])):
-        table.setdefault(str(batch), {})[opt] = {
-            "test_acc": _mean([r["test_acc"] for r in group]),
-            "train_acc": _mean([r["train_acc"] for r in group]),
-            "gen_error": _mean([r["gen_error"] for r in group]),
-            "replicates": len(group),
-        }
+        entry = {col: _mean([r[col] for r in group]) for col in columns}
+        entry["replicates"] = len(group)
+        table.setdefault(str(batch), {})[opt] = entry
 
-    claims = _claims(table)
+    claims = (_cnn_claims(table) if grid.family == "cnn"
+              else _lm_claims(table))
     slim_rows = [{k: v for k, v in row.items() if k != "layer_stats"}
                  for row in rows]
     return {
         "grid": grid.fingerprint(),
+        "family": grid.family,
         "completed_cells": len(rows),
         "total_cells": len(grid.cells()),
-        "accuracy_vs_batch": table,
+        table_key: table,
         "claims": claims,
         "rows": slim_rows,
     }
 
 
-def _claims(table: dict) -> dict:
+def _cnn_claims(table: dict) -> dict:
     out: dict = {}
     batches = sorted(int(b) for b in table)
     both = [b for b in batches
@@ -82,6 +119,52 @@ def _claims(table: dict) -> dict:
     return out
 
 
+# The LM claim checks compare layer-wise optimizers against their
+# generic counterparts at MATCHED batch (LAMB vs AdamW share the Adam
+# direction; LARS vs SGD share the momentum direction — each pair
+# isolates the trust ratio as the only differing ingredient). Each pair
+# claim is emitted whenever ITS pair is complete at some batch, so
+# partial grids (e.g. a lamb-vs-adamw-only sweep) still get their
+# computable claims.
+LM_PAIRS = (("lamb", "adamw", "L2_lamb_le_adamw_at_largest_batch"),
+            ("lars", "sgd", "L3_lars_le_sgd_at_largest_batch"))
+LM_OPTS = ("lamb", "adamw", "lars", "sgd")
+
+
+def _lm_claims(table: dict) -> dict:
+    out: dict = {}
+    batches = sorted(int(b) for b in table)
+    ppl = lambda b, o: table[str(b)][o]["eval_ppl"]  # noqa: E731
+    has = lambda b, o: o in table[str(b)]            # noqa: E731
+    # comparability is judged where >= 2 optimizers coexist
+    multi = [b for b in batches
+             if sum(has(b, o) for o in LM_OPTS) >= 2]
+    if not multi:
+        return out
+    small, large = multi[0], multi[-1]
+    out["smallest_batch"] = small
+    out["largest_batch"] = large
+    at_small = [o for o in LM_OPTS if has(small, o)]
+    at_large = [o for o in LM_OPTS if has(large, o)]
+    for opt in at_large:
+        out[f"{opt}_eval_ppl_at_largest"] = ppl(large, opt)
+    best_small = min(ppl(small, o) for o in at_small)
+    out["L1_comparable_at_small_batch"] = bool(
+        max(ppl(small, o) for o in at_small) <= 1.25 * best_small)
+    for layerwise, generic, key in LM_PAIRS:
+        pair_batches = [b for b in batches
+                        if has(b, layerwise) and has(b, generic)]
+        if pair_batches:
+            b = pair_batches[-1]
+            out[key] = bool(ppl(b, layerwise) <= ppl(b, generic))
+    if set(LM_OPTS) <= set(at_large):
+        lw = min(ppl(large, "lamb"), ppl(large, "lars"))
+        gen = min(ppl(large, "adamw"), ppl(large, "sgd"))
+        out["L4_best_layerwise_beats_best_generic_at_largest"] = bool(
+            lw <= gen)
+    return out
+
+
 def write_report(path: str, grid: GridSpec, manifest: dict,
                  backend: Optional[str] = None) -> dict:
     payload = aggregate(grid, manifest)
@@ -92,7 +175,16 @@ def write_report(path: str, grid: GridSpec, manifest: dict,
 
 
 def format_table(payload: dict) -> str:
-    """Human-readable accuracy-vs-batch table for CLI output."""
+    """Human-readable metric-vs-batch table for CLI output."""
+    if payload.get("family", "cnn") == "lm":
+        lines = [f"{'batch':>7s} {'opt':6s} {'eval_ppl':>9s} "
+                 f"{'eval_loss':>10s} {'eval_acc':>9s}"]
+        for batch in sorted(payload["perplexity_vs_batch"], key=int):
+            cells = payload["perplexity_vs_batch"][batch]
+            for opt, m in sorted(cells.items()):
+                lines.append(f"{batch:>7s} {opt:6s} {m['eval_ppl']:9.3f} "
+                             f"{m['eval_loss']:10.4f} {m['eval_acc']:9.4f}")
+        return "\n".join(lines)
     lines = [f"{'batch':>7s} {'opt':6s} {'train':>7s} {'test':>7s} "
              f"{'gen_err':>8s}"]
     for batch in sorted(payload["accuracy_vs_batch"], key=int):

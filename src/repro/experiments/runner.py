@@ -1,5 +1,17 @@
 """Grid execution: every cell through TrainPipeline, resumable mid-grid.
 
+Two families run through the same machinery (dispatch on
+``grid.family``):
+
+* ``cnn`` — the paper's LeNet/MNIST study: shuffled epoch-cycling
+  minibatches from the procedural MNIST stand-in, metric = test
+  accuracy;
+* ``lm``  — token-LM cells on a ``reduced()`` LM config
+  (``configs/smollm_135m.py``-style): each cell streams seeded
+  synthetic Markov-corpus batches (:func:`repro.data.tokens.
+  token_batches` — deterministic per-cell, fast-forwardable), metric =
+  eval perplexity on a fixed held-out token set.
+
 Layout of a run directory::
 
     out_dir/
@@ -12,9 +24,11 @@ Resume contract (``run(resume=True)``):
 * completed cells (present in the manifest) are skipped outright;
 * a cell with a ``state.npz`` restores the full TrainState via
   :mod:`repro.checkpoint.npz`, rewinds its JSONL to the checkpointed
-  step, fast-forwards the (seeded) batch iterator, and continues —
-  the completed trajectory is IDENTICAL to an uninterrupted run
-  (pinned by tests/test_experiments.py);
+  step, fast-forwards the (seeded) batch iterator — CNN cells replay
+  the shuffle stream, LM cells rng-skip via ``token_batches(start=)``
+  — and continues; the completed trajectory is IDENTICAL to an
+  uninterrupted run (pinned by tests/test_experiments.py for both
+  families);
 * the manifest's grid fingerprint must match the requested grid, so a
   stale directory cannot silently mix protocols.
 
@@ -26,6 +40,7 @@ pay zero recompilation.
 
 from __future__ import annotations
 
+import math
 import os
 import shutil
 import time
@@ -38,7 +53,8 @@ import numpy as np
 from repro.checkpoint import restore_train_state, save_train_state
 from repro.configs import get_config
 from repro.core import grad_stats
-from repro.data import batch_iterator, synthetic_mnist
+from repro.data import (TokenTaskConfig, batch_iterator, synthetic_mnist,
+                        token_batches, token_eval_set)
 from repro.experiments.record import (TrajectoryRecorder, atomic_write_json,
                                       load_json, truncate_trajectory)
 from repro.experiments.spec import CellSpec, GridSpec
@@ -51,6 +67,27 @@ from repro.train import TrainPipeline, generalization_error, make_eval_step
 ABORT_ENV = "REPRO_EXPERIMENT_ABORT_AFTER_STEPS"
 
 
+def resolve_config(grid: GridSpec):
+    """The model config a grid's cells train: the registered config for
+    CNN grids, its ``reduced()`` CPU-scale variant (capped layers /
+    width / vocab from the grid's model fields) for LM grids."""
+    cfg = get_config(grid.arch)
+    if grid.family == "cnn":
+        if cfg.family != "cnn":
+            raise ValueError(
+                f"grid {grid.name!r}: family='cnn' needs a CNN arch "
+                f"(got {grid.arch!r}, family {cfg.family!r})")
+        return cfg
+    if cfg.family == "cnn":
+        raise ValueError(
+            f"grid {grid.name!r}: family='lm' needs a token-LM arch "
+            f"(got {grid.arch!r}, family {cfg.family!r})")
+    return cfg.reduced(
+        max_layers=grid.model_layers or 2,
+        max_d_model=grid.model_d_model or 256,
+        max_vocab=grid.vocab_size or 512)
+
+
 class GridRunner:
     """Executes a :class:`GridSpec` cell by cell into ``out_dir``."""
 
@@ -58,24 +95,18 @@ class GridRunner:
                  checkpoint_every: int = 25, collect_stats: bool = True,
                  record_memory: bool = True,
                  log: Optional[Callable[[str], None]] = print):
-        cfg = get_config(grid.arch)
-        if cfg.family != "cnn":
-            raise ValueError(
-                f"experiment harness currently drives the paper's CNN "
-                f"study only (got arch {grid.arch!r}, family "
-                f"{cfg.family!r}); LM-family sweep cells are a ROADMAP "
-                "item")
         self.grid = grid
         self.out_dir = out_dir
         self.checkpoint_every = checkpoint_every
         self.collect_stats = collect_stats
         self.record_memory = record_memory
         self.log = log or (lambda _line: None)
-        self.cfg = cfg
-        self.model = build_model(cfg)
-        self._eval_step = jax.jit(make_eval_step(self.model, cfg))
+        self.cfg = resolve_config(grid)
+        self.model = build_model(self.cfg)
+        self._eval_step = jax.jit(make_eval_step(self.model, self.cfg))
         self._pipelines: dict[tuple, TrainPipeline] = {}
         self._data = None
+        self._eval_tokens = None
         self._steps_done = 0
         abort = os.environ.get(ABORT_ENV)
         self._abort_after = int(abort) if abort else None
@@ -95,6 +126,47 @@ class GridRunner:
                                          self.grid.n_test,
                                          seed=self.grid.data_seed)
         return self._data
+
+    def token_task(self) -> TokenTaskConfig:
+        """The grid's shared Markov source (vocab matches the reduced
+        model's; the transition table is a grid-level constant — only
+        the per-cell sampling stream varies with the cell seed)."""
+        return TokenTaskConfig(vocab_size=self.cfg.vocab_size,
+                               seed=self.grid.data_seed)
+
+    def eval_tokens(self) -> np.ndarray:
+        if self._eval_tokens is None:
+            self._eval_tokens = token_eval_set(
+                self.token_task(), n=self.grid.n_test,
+                seq_len=self.grid.seq_len, seed=self.grid.data_seed + 1)
+        return self._eval_tokens
+
+    def cell_batches(self, cell: CellSpec, *, start: int = 0):
+        """The cell's deterministic batch stream, positioned at ``start``
+        (mid-cell resume). Every yielded batch is the dict the pipeline
+        step consumes."""
+        if self.grid.family == "cnn":
+            x_tr, y_tr, _, _ = self.data()
+            it = batch_iterator(x_tr, y_tr, batch=self.eff_batch(cell),
+                                seed=cell.cell_seed())
+            for _ in range(start):
+                next(it)  # replay the shuffle stream
+            for b in it:
+                yield {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+        else:
+            it = token_batches(self.token_task(),
+                               batch=self.eff_batch(cell),
+                               seq_len=cell.seq_len,
+                               seed=cell.cell_seed(), start=start)
+            for toks in it:
+                yield {"tokens": jnp.asarray(toks)}
+
+    def eff_batch(self, cell: CellSpec) -> int:
+        """CNN cells cap the batch at the dataset size; LM streams are
+        synthetic and unbounded."""
+        if self.grid.family == "cnn":
+            return min(cell.batch, self.grid.n_train)
+        return cell.batch
 
     def pipeline(self, cell: CellSpec) -> TrainPipeline:
         key = cell.pipeline_key()
@@ -136,16 +208,14 @@ class GridRunner:
 
     def run_cell(self, cell: CellSpec, *, resume: bool = False) -> dict:
         """Train one cell to completion; returns its summary row."""
-        x_tr, y_tr, x_te, y_te = self.data()
         steps = cell.steps
-        eff_batch = min(cell.batch, len(x_tr))
+        eff_batch = self.eff_batch(cell)
         if eff_batch % cell.accum_steps:
             raise ValueError(
                 f"cell {cell.cell_id}: effective batch {eff_batch} not "
                 f"divisible by accum_steps={cell.accum_steps}")
         pipe = self.pipeline(cell)
-        cell_seed = cell.cell_seed()
-        state = pipe.init_state(jax.random.key(cell_seed))
+        state = pipe.init_state(jax.random.key(cell.cell_seed()))
 
         cdir = self.cell_dir(cell)
         traj_path = os.path.join(cdir, "trajectory.jsonl")
@@ -163,22 +233,31 @@ class GridRunner:
             shutil.rmtree(cdir)  # partial cell without checkpoint: redo
 
         recorder = TrajectoryRecorder(traj_path, append=start > 0)
-        it = batch_iterator(x_tr, y_tr, batch=eff_batch, seed=cell_seed)
-        for _ in range(start):
-            next(it)  # replay the stream to the checkpointed step
+        it = self.cell_batches(cell, start=start)
 
-        t0 = time.perf_counter()
+        t0 = t_prev = time.perf_counter()
+        batch: dict = {}
         metrics: dict = {}
         try:
             for i in range(start, steps):
-                b = next(it)
-                state, metrics = pipe(state, {
-                    "x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])})
+                batch = next(it)
+                state, metrics = pipe(state, batch)
                 entry = {"step": i, "loss": float(metrics["loss"]),
                          "aux_loss": float(metrics["aux_loss"])}
+                if self.grid.family == "lm":
+                    entry["ppl"] = round(math.exp(
+                        min(entry["loss"], 30.0)), 4)
                 if "stats" in metrics:
                     entry["trust"] = grad_stats.summarize(metrics["stats"])
-                entry["wall_s"] = round(time.perf_counter() - t0, 3)
+                t_now = time.perf_counter()
+                if self.grid.family == "lm":
+                    # throughput telemetry (a TIMING_KEY: stripped when
+                    # trajectories are compared for determinism)
+                    entry["tokens_per_s"] = round(
+                        eff_batch * cell.seq_len
+                        / max(t_now - t_prev, 1e-9), 1)
+                entry["wall_s"] = round(t_now - t0, 3)
+                t_prev = t_now
                 recorder.record(entry)
                 done = i + 1
                 if self.checkpoint_every and done < steps \
@@ -200,12 +279,19 @@ class GridRunner:
                 for layer, table in metrics["stats"].items()}
             row["trust_final"] = grad_stats.summarize(metrics["stats"])
         if self.record_memory:
-            row["peak_bytes"] = self._peak_bytes(pipe, eff_batch)
+            row["peak_bytes"] = pipe.compiled_peak_bytes(batch)
         if os.path.exists(ckpt_path):
             os.remove(ckpt_path)  # completed cells resume via manifest
         return row
 
+    # --------------------------------------------------------- evaluation
+
     def _evaluate(self, cell: CellSpec, state) -> dict:
+        if self.grid.family == "cnn":
+            return self._evaluate_cnn(state)
+        return self._evaluate_lm(state)
+
+    def _evaluate_cnn(self, state) -> dict:
         x_tr, y_tr, x_te, y_te = self.data()
 
         def acc_of(x, y, chunk: int = 1024) -> float:
@@ -224,24 +310,23 @@ class GridRunner:
                 "gen_error": round(
                     generalization_error(train_acc, test_acc), 4)}
 
-    def _peak_bytes(self, pipe: TrainPipeline, eff_batch: int
-                    ) -> Optional[int]:
-        """Compiled peak memory of the cell's step (cached per pipeline;
-        None on backends without memory analysis)."""
-        if getattr(pipe, "_peak_bytes", "miss") != "miss":
-            return pipe._peak_bytes
-        peak = None
-        try:
-            batch = {"x": jnp.zeros((eff_batch, 28, 28, 1), jnp.float32),
-                     "y": jnp.zeros((eff_batch,), jnp.int32)}
-            state = pipe.init_state(jax.random.key(0))
-            mem = pipe.lower(state, batch).compile().memory_analysis()
-            peak = int(mem.temp_size_in_bytes + mem.argument_size_in_bytes
-                       + mem.output_size_in_bytes)
-        except Exception:
-            pass
-        pipe._peak_bytes = peak
-        return peak
+    def _evaluate_lm(self, state, chunk: int = 64) -> dict:
+        """Held-out next-token loss -> eval perplexity (the LM study's
+        metric column) + next-token accuracy, chunked so one jitted
+        eval shape serves every grid cell."""
+        toks = self.eval_tokens()
+        loss_sum = acc_sum = 0.0
+        n = len(toks)
+        for i in range(0, n, chunk):
+            part = toks[i:i + chunk]
+            m = self._eval_step(state.params,
+                                {"tokens": jnp.asarray(part)})
+            loss_sum += float(m["loss"]) * len(part)
+            acc_sum += float(m["accuracy"]) * len(part)
+        eval_loss = loss_sum / n
+        return {"eval_loss": round(eval_loss, 4),
+                "eval_ppl": round(math.exp(min(eval_loss, 30.0)), 4),
+                "eval_acc": round(acc_sum / n, 4)}
 
     # -------------------------------------------------------------- grid
 

@@ -1,17 +1,39 @@
-"""Declarative experiment grids for the paper's LARS-vs-SGD study.
+"""Declarative experiment grids for the paper's LARS-vs-SGD study and
+its LM-family extension (the paper's §6 future work: LAMB on token LMs).
 
 A :class:`GridSpec` is the full experimental protocol as data: the axes
-(optimizer x global batch x precision x accum_steps x lr-policy x seed),
-the shared tuning budget (one set of hyperparameters for every cell —
-the controlled-comparison discipline of Nado et al., 2102.06356), the
-dataset sizes, and the epoch budget. ``cells()`` expands the product
-into :class:`CellSpec` rows in a deterministic order, and every cell
-derives its OWN rng seed from a stable hash of its coordinates, so
+(optimizer x global batch x precision x accum_steps x lr-policy x
+lr-schedule x seed), the shared tuning budget (one set of
+hyperparameters for every cell — the controlled-comparison discipline of
+Nado et al., 2102.06356), the dataset sizes, and the epoch budget.
+``cells()`` expands the product into :class:`CellSpec` rows in a
+deterministic order, and every cell derives its OWN rng seed from a
+stable hash of its coordinates, so
 
 * two runs of the same grid are bit-reproducible cell by cell;
 * adding a batch size to the grid does not reshuffle the seeds of the
   cells that were already there (the seed depends on the cell's
   coordinates, not its position in the expansion).
+
+Two families run through the same protocol:
+
+* ``family="cnn"`` — the paper's LeNet/MNIST study: metric is test
+  accuracy, data is the procedural MNIST stand-in;
+* ``family="lm"``  — token-LM cells on a ``reduced()`` variant of a
+  registered LM config (``configs/smollm_135m.py``-style), fed by the
+  seeded synthetic Markov corpus in :mod:`repro.data.tokens`; metric is
+  eval perplexity. This is where the LAMB column runs the same protocol
+  as the paper's LARS study.
+
+The ``lr_schedule`` axis threads :func:`repro.core.schedules.
+large_batch_lr` (warmup + polynomial decay — the You et al. recipe)
+through cells as a first-class coordinate, so the warmup ablation runs
+as grid cells instead of ad-hoc scripts:
+
+* ``inverse_time`` — paper Table 1: scaled lr0 / (1 + k*t);
+* ``poly``         — scaled lr0, polynomial decay, no warmup;
+* ``poly_warmup``  — linear warmup over ``warmup_frac`` of the cell's
+  steps, then polynomial decay (``large_batch_lr``).
 
 Named grids live in :data:`GRIDS`; ``repro.launch.experiment --grid``
 resolves them by name, and ``benchmarks/paper_sweep.py`` builds ad-hoc
@@ -31,6 +53,14 @@ LR_DECAY = 1e-4
 WEIGHT_DECAY = 1e-4
 MOMENTUM = 0.9
 TRUST_COEF = 0.001
+# Adam-family cells (lamb/adamw) run their own base LR: one momentum-SGD
+# LR for Adam-style direction updates would leave half the grid
+# untrained and the comparison vacuous (the Nado et al. point — each
+# optimizer family gets a tuned base, the SCHEDULE and scaling policy
+# stay shared).
+ADAM_INIT_LR = 0.01
+
+LR_SCHEDULES = ("inverse_time", "poly", "poly_warmup")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,18 +83,42 @@ class CellSpec:
     weight_decay: float = WEIGHT_DECAY
     trust_coef: float = TRUST_COEF
     lr_decay: float = LR_DECAY
+    # --- LR schedule shape (the warmup-ablation axis) ---
+    lr_schedule: str = "inverse_time"   # inverse_time | poly | poly_warmup
+    warmup_frac: float = 0.1            # fraction of steps warmed up
+    adam_base_lr: float = ADAM_INIT_LR  # lamb/adamw base LR
+    # per-optimizer base-LR overrides ((name, lr) pairs): trust-ratio
+    # optimizers take RELATIVE per-layer steps, so one base can't serve
+    # both them and their generic counterparts — each optimizer gets a
+    # tuned base, the schedule and scaling policy stay shared
+    base_lr_overrides: tuple = ()
+    # --- family + LM model/data coordinates (family="cnn": unused) ---
+    family: str = "cnn"                 # "cnn" | "lm"
+    seq_len: int = 0                    # LM: training sequence length
+    vocab_size: int = 0                 # LM: data + reduced-model vocab
+    model_layers: int = 0               # LM: reduced() max_layers
+    model_d_model: int = 0              # LM: reduced() max_d_model
 
     @property
     def cell_id(self) -> str:
-        """Stable directory/manifest key, e.g. ``lars-b2048-f32-a1-none-s0``."""
-        return (f"{self.optimizer}-b{self.batch}-{self.precision}"
+        """Stable directory/manifest key, e.g. ``lars-b2048-f32-a1-none-s0``
+        (non-default lr schedules append their tag so ablation cells get
+        distinct directories)."""
+        base = (f"{self.optimizer}-b{self.batch}-{self.precision}"
                 f"-a{self.accum_steps}-{self.lr_policy}-s{self.seed}")
+        if self.lr_schedule != "inverse_time":
+            base += f"-{self.lr_schedule}"
+        return base
 
     def cell_seed(self) -> int:
         """Deterministic rng seed from the cell's coordinates (CRC32 of
         the id string — stable across processes and grid edits, unlike
-        Python's salted ``hash``)."""
-        key = f"{self.grid}/{self.cell_id}"
+        Python's salted ``hash``). The lr-schedule tag is deliberately
+        EXCLUDED: warmup-ablation cells share init + data stream so the
+        schedule is the only varying ingredient."""
+        key = (f"{self.grid}/{self.optimizer}-b{self.batch}"
+               f"-{self.precision}-a{self.accum_steps}-{self.lr_policy}"
+               f"-s{self.seed}")
         return zlib.crc32(key.encode()) & 0x7FFFFFFF
 
     @property
@@ -74,15 +128,43 @@ class CellSpec:
         import math
         return max(1, math.ceil(self.epochs * self.n_train / self.batch))
 
-    def build_optimizer(self):
-        """The cell's optimizer with its scheduled LR (scaled for the
-        cell's batch under the grid's lr_policy, then inverse-time
-        decayed — paper Table 1)."""
-        from repro.core import get_optimizer, schedules
+    @property
+    def cell_base_lr(self) -> float:
+        """The optimizer-family base LR this cell scales from."""
+        for name, lr in self.base_lr_overrides:
+            if name == self.optimizer:
+                return float(lr)
+        if self.optimizer in ("lamb", "adamw"):
+            return self.adam_base_lr
+        return self.base_lr
+
+    def make_lr_schedule(self):
+        """The cell's LR schedule: batch-size scaling of the family base
+        LR under the grid's lr_policy, shaped by the lr_schedule axis.
+        ``poly``/``poly_warmup`` go through
+        :func:`repro.core.schedules.large_batch_lr` (the You et al.
+        warmup + poly-decay recipe); ``inverse_time`` is paper Table 1.
+        """
+        from repro.core import schedules
         from repro.core.scaling import scaled_lr
-        lr0 = scaled_lr(self.base_lr, self.base_batch, self.batch,
-                        self.lr_policy)
-        lr = schedules.inverse_time_decay(lr0, self.lr_decay)
+        if self.lr_schedule == "inverse_time":
+            lr0 = scaled_lr(self.cell_base_lr, self.base_batch, self.batch,
+                            self.lr_policy)
+            return schedules.inverse_time_decay(lr0, self.lr_decay)
+        if self.lr_schedule not in LR_SCHEDULES:
+            raise ValueError(f"unknown lr_schedule {self.lr_schedule!r}; "
+                             f"have {LR_SCHEDULES}")
+        warmup = 0
+        if self.lr_schedule == "poly_warmup":
+            warmup = max(1, round(self.warmup_frac * self.steps))
+        return schedules.large_batch_lr(
+            self.cell_base_lr, self.base_batch, self.batch, self.steps,
+            warmup_steps=warmup, policy=self.lr_policy)
+
+    def build_optimizer(self):
+        """The cell's optimizer with its scheduled LR."""
+        from repro.core import get_optimizer
+        lr = self.make_lr_schedule()
         if self.optimizer == "sgd":
             return get_optimizer("sgd", learning_rate=lr,
                                  momentum=self.momentum,
@@ -107,10 +189,17 @@ class CellSpec:
         return (self.arch, self.optimizer, self.batch, self.accum_steps,
                 self.precision, self.lr_policy, self.base_lr,
                 self.base_batch, self.momentum, self.weight_decay,
-                self.trust_coef, self.lr_decay)
+                self.trust_coef, self.lr_decay, self.lr_schedule,
+                self.warmup_frac, self.adam_base_lr,
+                tuple(map(tuple, self.base_lr_overrides)), self.family,
+                self.seq_len, self.vocab_size, self.model_layers,
+                self.model_d_model, self.epochs, self.n_train)
 
     def to_json(self) -> dict:
-        return dataclasses.asdict(self)
+        """JSON-normalized (tuples -> lists) so in-memory manifest rows
+        compare equal to rows loaded back from disk."""
+        import json
+        return json.loads(json.dumps(dataclasses.asdict(self)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,11 +209,13 @@ class GridSpec:
 
     name: str
     arch: str = "lenet-mnist"
+    family: str = "cnn"                 # "cnn" | "lm"
     optimizers: tuple[str, ...] = ("sgd", "lars")
     batches: tuple[int, ...] = (32, 512, 4096)
     precisions: tuple[str, ...] = ("f32",)
     accum_steps: tuple[int, ...] = (1,)
     lr_policies: tuple[str, ...] = ("none",)
+    lr_schedules: tuple[str, ...] = ("inverse_time",)
     seeds: tuple[int, ...] = (0,)
     epochs: int = 20
     n_train: int = 8192
@@ -136,15 +227,37 @@ class GridSpec:
     weight_decay: float = WEIGHT_DECAY
     trust_coef: float = TRUST_COEF
     lr_decay: float = LR_DECAY
+    warmup_frac: float = 0.1
+    adam_base_lr: float = ADAM_INIT_LR
+    base_lr_overrides: tuple = ()       # ((optimizer, base_lr), ...)
+    # --- LM-family protocol (family="lm" only) ---
+    seq_len: int = 0                    # training sequence length
+    vocab_size: int = 0                 # synthetic-corpus + model vocab
+    model_layers: int = 0               # reduced() max_layers (0 = default)
+    model_d_model: int = 0              # reduced() max_d_model (0 = default)
+    # report file this grid writes its aggregated study to. Variants of
+    # one study (e.g. lm_smoke and the full lm_lars_vs_lamb) share the
+    # path — each run REPLACES the file with its own cells (most recent
+    # run wins; reports are not merged across grids, and each payload
+    # records its grid fingerprint). "" = EXPERIMENTS_<name>.json
+    report_name: str = ""
 
     def cells(self) -> list[CellSpec]:
         """Deterministic row-major expansion: batch-major (so the sweep
         prints as the paper's tables read), then optimizer, precision,
-        accumulation, lr-policy, seed."""
+        accumulation, lr-policy, lr-schedule, seed."""
+        if self.family not in ("cnn", "lm"):
+            raise ValueError(f"grid {self.name!r}: unknown family "
+                             f"{self.family!r} (have cnn, lm)")
+        if self.family == "lm" and self.seq_len <= 0:
+            raise ValueError(
+                f"grid {self.name!r}: family='lm' requires seq_len > 0")
         out = []
-        for batch, opt, prec, accum, policy, seed in itertools.product(
-                self.batches, self.optimizers, self.precisions,
-                self.accum_steps, self.lr_policies, self.seeds):
+        for batch, opt, prec, accum, policy, sched, seed in \
+                itertools.product(
+                    self.batches, self.optimizers, self.precisions,
+                    self.accum_steps, self.lr_policies, self.lr_schedules,
+                    self.seeds):
             if batch % accum:
                 raise ValueError(
                     f"grid {self.name!r}: batch {batch} not divisible by "
@@ -155,8 +268,21 @@ class GridSpec:
                 base_lr=self.base_lr, base_batch=self.base_batch,
                 epochs=self.epochs, n_train=self.n_train, seed=seed,
                 momentum=self.momentum, weight_decay=self.weight_decay,
-                trust_coef=self.trust_coef, lr_decay=self.lr_decay))
+                trust_coef=self.trust_coef, lr_decay=self.lr_decay,
+                lr_schedule=sched, warmup_frac=self.warmup_frac,
+                adam_base_lr=self.adam_base_lr,
+                base_lr_overrides=tuple(map(tuple,
+                                            self.base_lr_overrides)),
+                family=self.family,
+                seq_len=self.seq_len, vocab_size=self.vocab_size,
+                model_layers=self.model_layers,
+                model_d_model=self.model_d_model))
         return out
+
+    @property
+    def report_file(self) -> str:
+        """Default aggregated-report path for this grid's study."""
+        return self.report_name or f"EXPERIMENTS_{self.name}.json"
 
     def fingerprint(self) -> dict:
         """JSON-able identity of the protocol; ``--resume`` refuses to
@@ -177,7 +303,7 @@ class GridSpec:
 
 # ------------------------------------------------------------- registry
 
-# The registered grids run the LARGE-BATCH RECIPE — linear LR scaling
+# The registered CNN grids run the LARGE-BATCH RECIPE — linear LR scaling
 # from (base_lr, base_batch), identical for both optimizers (same tuning
 # budget; the only differing ingredient is the trust ratio, which IS the
 # claim under test). Under linear scaling the large-batch LR is where
@@ -187,6 +313,12 @@ class GridSpec:
 # CI scale has far fewer total updates than the paper's MNIST runs, and
 # 0.001 leaves LARS undertrained everywhere (tuned on the smoke grid;
 # both registered grids share the value so results stay comparable).
+#
+# The LM grids run the paper's §6 future work — the LAMB column through
+# the exact same protocol: sqrt LR scaling (the You et al. policy for
+# trust-ratio optimizers), the warmup + poly-decay schedule, reduced
+# smollm on the seeded synthetic Markov corpus, eval perplexity as the
+# metric. Both LM grids report into EXPERIMENTS_lm_lars_vs_lamb.json.
 GRIDS: dict[str, GridSpec] = {
     # The paper's study (Figs. 2-4): fixed hyperparameters, fixed epoch
     # budget, batch scaled until SGD and LARS separate.
@@ -212,6 +344,52 @@ GRIDS: dict[str, GridSpec] = {
         precisions=("bf16",), accum_steps=(4,),
         lr_policies=("linear",), trust_coef=0.02,
         epochs=8, n_train=2048, n_test=512),
+    # The warmup ablation as grid cells (ROADMAP item): the large-batch
+    # SGD cell with and without linear warmup under poly decay, LARS
+    # alongside — does warmup rescue the scaled-LR collapse?
+    "warmup_ablation": GridSpec(
+        name="warmup_ablation",
+        batches=(1024,), lr_policies=("linear",),
+        lr_schedules=("poly", "poly_warmup"), warmup_frac=0.25,
+        trust_coef=0.02, epochs=8, n_train=2048, n_test=512),
+    # CI-sized token-LM smoke grid: all four optimizer columns x one
+    # small and one large batch on a 2-layer reduced smollm — the
+    # perplexity-vs-batch table covering lamb/adamw/lars/sgd that the
+    # LM study's claim checks read. ~6 min on CPU. Base LRs were tuned
+    # per optimizer AT THE SMALL BATCH (the paper's Table-1 discipline:
+    # tune once, then scale), schedule and sqrt scaling shared: sgd 0.3,
+    # lars 1.0, lamb 0.1, adamw 0.01 — trust-ratio optimizers take
+    # relative per-layer steps, so their bases sit 1-2 orders above
+    # their generic counterparts by construction. The 2-epoch budget is
+    # the smallest at which the large-batch cells (32 steps) clear seed
+    # noise: at 1 epoch / 16 steps the lamb-vs-adamw ordering flips
+    # between seeds.
+    "lm_smoke": GridSpec(
+        name="lm_smoke", arch="smollm-135m", family="lm",
+        optimizers=("lamb", "adamw", "lars", "sgd"),
+        batches=(16, 128),
+        lr_policies=("sqrt",), lr_schedules=("poly_warmup",),
+        warmup_frac=0.1, base_lr=0.3, base_batch=16, adam_base_lr=0.01,
+        base_lr_overrides=(("lars", 1.0), ("lamb", 0.1)),
+        trust_coef=0.02, weight_decay=1e-4,
+        epochs=2, n_train=2048, n_test=256,
+        seq_len=32, vocab_size=256, model_layers=2, model_d_model=128,
+        report_name="EXPERIMENTS_lm_lars_vs_lamb.json"),
+    # The full LM study: LARS/LAMB vs their non-layer-wise counterparts
+    # across a batch sweep at fixed epoch budget — the LAMB column run
+    # under the paper's exact protocol (its stated §6 future work).
+    # Same per-optimizer bases as the smoke grid (tuned at b16).
+    "lm_lars_vs_lamb": GridSpec(
+        name="lm_lars_vs_lamb", arch="smollm-135m", family="lm",
+        optimizers=("lamb", "adamw", "lars", "sgd"),
+        batches=(16, 64, 256, 1024),
+        lr_policies=("sqrt",), lr_schedules=("poly_warmup",),
+        warmup_frac=0.1, base_lr=0.3, base_batch=16, adam_base_lr=0.01,
+        base_lr_overrides=(("lars", 1.0), ("lamb", 0.1)),
+        trust_coef=0.02, weight_decay=1e-4,
+        epochs=4, n_train=8192, n_test=512,
+        seq_len=64, vocab_size=512, model_layers=2, model_d_model=192,
+        report_name="EXPERIMENTS_lm_lars_vs_lamb.json"),
 }
 
 

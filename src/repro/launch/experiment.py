@@ -5,6 +5,10 @@ Examples::
   # the CI smoke study (2x2: sgd/lars x small/large batch)
   PYTHONPATH=src python -m repro.launch.experiment --grid lars_vs_sgd_smoke
 
+  # the token-LM smoke study: lamb/adamw/lars/sgd x small/large batch on
+  # a reduced smollm, eval perplexity as the metric
+  PYTHONPATH=src python -m repro.launch.experiment --grid lm_smoke
+
   # the full paper sweep, interruptible and resumable mid-grid
   PYTHONPATH=src python -m repro.launch.experiment --grid lars_vs_sgd
   PYTHONPATH=src python -m repro.launch.experiment --grid lars_vs_sgd --resume
@@ -15,9 +19,10 @@ Examples::
 
 The run directory (``--out-dir``, default ``runs/<grid>``) holds the
 manifest and one JSONL trajectory per cell; the aggregated report
-(accuracy-vs-batch table + claim checks) is written to ``--out``
-(default ``EXPERIMENTS_<grid>.json``) after every invocation, from
-whatever cells have completed so far.
+(metric-vs-batch table + claim checks) is written to ``--out`` (default:
+the grid's registered report file, e.g. ``EXPERIMENTS_<grid>.json`` or
+``EXPERIMENTS_lm_lars_vs_lamb.json`` for the LM study) after every
+invocation, from whatever cells have completed so far.
 """
 
 from __future__ import annotations
@@ -63,12 +68,14 @@ def main(argv=None) -> int:
                     help="override the grid's train-set size")
     ap.add_argument("--seeds", type=int, nargs="+", default=None,
                     help="override the grid's replicate seeds")
+    ap.add_argument("--seq-len", type=int, default=None,
+                    help="override an LM grid's training sequence length")
     args = ap.parse_args(argv)
 
     if args.list_grids:
         for name in sorted(GRIDS):
             g = GRIDS[name]
-            print(f"{name}: {len(g.cells())} cells  "
+            print(f"{name}: {len(g.cells())} cells  family={g.family} "
                   f"optimizers={list(g.optimizers)} "
                   f"batches={list(g.batches)} epochs={g.epochs}")
         return 0
@@ -82,6 +89,8 @@ def main(argv=None) -> int:
         overrides["n_train"] = args.n_train
     if args.seeds is not None:
         overrides["seeds"] = tuple(args.seeds)
+    if args.seq_len is not None:
+        overrides["seq_len"] = args.seq_len
     grid = get_grid(args.grid, **overrides)
 
     if args.list_cells:
@@ -90,7 +99,7 @@ def main(argv=None) -> int:
         return 0
 
     out_dir = args.out_dir or f"runs/{grid.name}"
-    out = args.out or f"EXPERIMENTS_{grid.name}.json"
+    out = args.out or grid.report_file
     runner = GridRunner(grid, out_dir,
                         checkpoint_every=args.checkpoint_every,
                         collect_stats=not args.no_stats)

@@ -254,6 +254,25 @@ class TrainPipeline:
 
         return call
 
+    def compiled_peak_bytes(self, batch) -> Optional[int]:
+        """Compiled peak memory (temp + args + outputs) of this step on
+        an example batch, cached per pipeline; ``None`` on backends
+        without memory analysis. Family-agnostic — any batch pytree the
+        step accepts works, so the experiment harness reports the same
+        column for CNN and token-LM cells."""
+        if getattr(self, "_peak_bytes", "miss") != "miss":
+            return self._peak_bytes
+        peak = None
+        try:
+            state = self.init_state(jax.random.key(0))
+            mem = self.lower(state, batch).compile().memory_analysis()
+            peak = int(mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                       + mem.output_size_in_bytes)
+        except Exception:
+            pass
+        self._peak_bytes = peak
+        return peak
+
     def lower(self, state: TrainState, batch):
         """``jax.stages.Lowered`` for this step — compile-time
         introspection (``.compile().memory_analysis()`` drives the

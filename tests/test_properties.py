@@ -6,6 +6,15 @@ Pinned invariants:
 
 * the LARS trust ratio is scale-invariant to a SIMULTANEOUS rescaling of
   params and grads (eta*c||w|| / (c||g|| + wd*c||w||) cancels c);
+* the LAMB trust ratio makes the first update scale-EQUIVARIANT under
+  the same joint rescaling (the Adam direction is scale-free, so
+  phi(||w||)/||u|| rescales the step with the weights — the property
+  that lets one LAMB base LR serve layers of very different magnitude)
+  — on both engines;
+* the Adam-family bias correction is exact on both engines: under a
+  constant gradient the corrected moments equal the raw gradient (and
+  its square) at EVERY step, so each AdamW update is the same
+  closed-form step;
 * from zero momentum, one LARS/SGD update is positively homogeneous in
   the learning rate (the trust ratio does not depend on lr, so the
   applied step scales linearly) — on both engines;
@@ -23,7 +32,7 @@ import numpy as np
 sys.path.insert(0, str(Path(__file__).parent))
 from _hypothesis_compat import given, settings, st  # noqa: E402
 
-from repro.core import lars, packing, sgd  # noqa: E402
+from repro.core import adamw, lamb, lars, packing, sgd  # noqa: E402
 from repro.core import trust_ratio as tr  # noqa: E402
 from repro.core.optim_base import normalize_stacked  # noqa: E402
 
@@ -82,6 +91,107 @@ def test_first_update_positively_homogeneous_in_lr(c, lr, opt_name,
     for a, b in zip(tree_leaves(d1), tree_leaves(dc)):
         # rtol bounded by f32 cancellation in (w' - w) for small steps
         np.testing.assert_allclose(b, c * a, rtol=1e-3, atol=1e-7)
+
+
+# ----------------------------------------------------------- LAMB / Adam
+
+def _lamb_params():
+    """Small-norm leaves (|w| well below trust_clip_max so phi is the
+    identity and equivariance is exact), incl. a stacked layer leaf."""
+    params = {"w": 0.05 * _rand(0, (9, 6)),
+              "stack": 0.05 * _rand(1, (3, 4, 5)),
+              "b": 0.05 * _rand(2, (7,))}
+    marker = {"w": False, "stack": True, "b": False}
+    return params, marker
+
+
+@settings(max_examples=15, deadline=None)
+@given(c=st.floats(min_value=0.25, max_value=8.0),
+       seed=st.integers(min_value=0, max_value=2**16),
+       packed=st.sampled_from([False, True]))
+def test_lamb_first_update_scale_equivariant(c, seed, packed):
+    """Adapted leaves: delta(c*w, c*g) == c * delta(w, g) for LAMB with
+    wd=0 — the Adam direction is invariant under the joint rescaling
+    and the trust ratio phi(||w||)/||u|| picks up exactly the factor c,
+    so the layer-wise step tracks the layer's own scale. Unadapted
+    rank<=1 leaves (skip_adaptation_1d) take the raw Adam step, which
+    is scale-INVARIANT under the same rescaling. Checked on both the
+    per-leaf and the flat-packed engine (eps=1e-8 bounds the residual
+    scale-dependence of sqrt(v_hat)+eps)."""
+    params, marker = _lamb_params()
+    jitter = float(_rand(seed, ())) * 0.01
+    grads = tree_map(lambda p: 0.3 * p + 0.02 + jitter, params)
+    opt = lamb(0.1, weight_decay=0.0, eps=1e-8)
+
+    def delta(scale):
+        p = tree_map(lambda x: scale * x, params)
+        g = tree_map(lambda x: scale * x, grads)
+        state = opt.init(p, stacked=marker if packed else None)
+        new, _ = opt.update(g, state, p,
+                            stacked=None if packed else marker)
+        return tree_map(lambda a, b: np.asarray(a) - np.asarray(b),
+                        new, p)
+
+    d1, dc = delta(1.0), delta(c)
+    adapted = {"w": True, "stack": True, "b": False}
+    for key in sorted(params):
+        a, b = d1[key], dc[key]
+        expect = c * a if adapted[key] else a
+        np.testing.assert_allclose(b, expect, rtol=1e-4, atol=1e-8,
+                                   err_msg=f"leaf {key}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16),
+       packed=st.sampled_from([False, True]),
+       opt_name=st.sampled_from(["adamw", "lamb"]))
+def test_adam_bias_correction_exact_under_constant_grad(seed, packed,
+                                                        opt_name):
+    """Under a CONSTANT gradient g the bias-corrected moments are exact
+    at every step t: mu_t/(1-b1^t) == g and nu_t/(1-b2^t) == g^2, so
+    each AdamW step (wd=0) equals the closed form -lr * g/(|g|+eps).
+    A wrong correction exponent or a packed-engine moment-slot mixup
+    shows up at step 1 already. Both engines, both Adam-family rules."""
+    lr, eps = 0.01, 1e-8
+    params, marker = _lamb_params()
+    grads = tree_map(lambda p: 0.2 * p + 0.05, params)
+    make = adamw if opt_name == "adamw" else lamb
+    opt = make(lr, weight_decay=0.0, eps=eps)
+    state = opt.init(params, stacked=marker if packed else None)
+    p = params
+    b1, b2 = 0.9, 0.999
+    for t in range(1, 4):
+        p_prev = p
+        p, state = opt.update(grads, state, p_prev,
+                              stacked=None if packed else marker)
+        # corrected moments == raw gradient (and square), every step
+        slots = state.slots
+        if packed:
+            layout = state.layout
+            mu = packing.unpack(layout, slots["mu"])
+            nu = packing.unpack(layout, slots["nu"])
+        else:
+            mu, nu = slots["mu"], slots["nu"]
+        for m_leaf, n_leaf, g_leaf in zip(tree_leaves(mu),
+                                          tree_leaves(nu),
+                                          tree_leaves(grads)):
+            g_np = np.asarray(g_leaf, np.float64)
+            np.testing.assert_allclose(
+                np.asarray(m_leaf, np.float64) / (1 - b1 ** t), g_np,
+                rtol=2e-5, err_msg=f"mu bias correction, step {t}")
+            np.testing.assert_allclose(
+                np.asarray(n_leaf, np.float64) / (1 - b2 ** t),
+                g_np ** 2, rtol=2e-5,
+                err_msg=f"nu bias correction, step {t}")
+        if opt_name == "adamw":
+            # each step is the identical closed-form Adam step
+            for a, b, g_leaf in zip(tree_leaves(p), tree_leaves(p_prev),
+                                    tree_leaves(grads)):
+                g_np = np.asarray(g_leaf, np.float64)
+                np.testing.assert_allclose(
+                    np.asarray(a, np.float64) - np.asarray(b, np.float64),
+                    -lr * g_np / (np.abs(g_np) + eps), rtol=2e-4,
+                    atol=1e-9, err_msg=f"adamw closed-form step {t}")
 
 
 # ----------------------------------------------------------- pack/unpack
