@@ -25,7 +25,8 @@ from repro.core import trust_ratio as tr
 def lamb(learning_rate: float | Schedule = 1e-3, *, b1: float = 0.9,
          b2: float = 0.999, eps: float = 1e-6, weight_decay: float = 1e-4,
          trust_clip_max: float = 10.0,
-         skip_adaptation_1d: bool = True) -> Optimizer:
+         skip_adaptation_1d: bool = True,
+         slot_dtype: str = "f32") -> Optimizer:
     prepare, direction = adam_moments(b1, b2, eps, weight_decay)
 
     def trust(ctx, w_norm, u_norm):
@@ -38,9 +39,10 @@ def lamb(learning_rate: float | Schedule = 1e-3, *, b1: float = 0.9,
                          direction=direction, apply=apply, trust=trust,
                          prepare=prepare, needs_grad_sq=True,
                          skip_adaptation_1d=skip_adaptation_1d)
-    return make_optimizer(rule, learning_rate,
+    return make_optimizer(rule, learning_rate, slot_dtype=slot_dtype,
                           hyperparams=dict(learning_rate=learning_rate,
                                            b1=b1, b2=b2,
                                            weight_decay=weight_decay,
                                            trust_clip_max=trust_clip_max,
-                                           skip_adaptation_1d=skip_adaptation_1d))
+                                           skip_adaptation_1d=skip_adaptation_1d,
+                                           slot_dtype=slot_dtype))

@@ -39,8 +39,16 @@ from repro.core import trust_ratio as tr
 def lars(learning_rate: float | Schedule = 0.01, *, momentum: float = 0.9,
          weight_decay: float = 1e-4, trust_coefficient: float = 0.001,
          skip_adaptation_1d: bool = True, eps: float = 1e-9,
-         use_pallas: bool = False) -> Optimizer:
-    """Build the LARS optimizer (paper defaults from Table 1)."""
+         use_pallas: bool | str = "auto",
+         slot_dtype: str = "f32") -> Optimizer:
+    """Build the LARS optimizer (paper defaults from Table 1).
+
+    ``use_pallas="auto"`` (default) compiles the megakernels on TPU and
+    takes the fused jnp engine on CPU/GPU (where interpret-mode Pallas
+    is ~100x slower); pass True/False to force one path.
+    ``slot_dtype="int8"`` stores the momentum slot as int8 codes + f32
+    per-block scales (~4x smaller optimizer state).
+    """
 
     def direction(ctx, g, w, slots):
         return g, slots          # Eq. 3 norms the raw gradient
@@ -68,16 +76,29 @@ def lars(learning_rate: float | Schedule = 0.01, *, momentum: float = 0.9,
             momentum=momentum, weight_decay=weight_decay)
         return wbuf2, {"momentum": mbuf2}
 
+    def packed_apply_q8(ctx, layout, wbuf, gbuf, ubuf, lr_slices, slots):
+        # int8 momentum: dequant-update-requant fused in ONE launch — the
+        # f32 momentum buffer never round-trips through HBM
+        from repro.kernels import ops as kops
+        wbuf2, q2, s2 = kops.lars_apply_packed_q8(
+            layout, wbuf, gbuf, slots["momentum"],
+            slots["momentum_scale"], lr_slices,
+            momentum=momentum, weight_decay=weight_decay)
+        return wbuf2, {"momentum": q2, "momentum_scale": s2}
+
     rule = LayerwiseRule(name="lars", slots=("momentum",),
                          direction=direction, apply=apply, trust=trust,
                          skip_adaptation_1d=skip_adaptation_1d,
                          trust_operand_is_grad=True,
                          packed_norms=packed_norms,
-                         packed_apply=packed_apply)
+                         packed_apply=packed_apply,
+                         packed_apply_q8=packed_apply_q8)
     return make_optimizer(rule, learning_rate, use_pallas=use_pallas,
+                          slot_dtype=slot_dtype,
                           hyperparams=dict(learning_rate=learning_rate,
                                            momentum=momentum,
                                            weight_decay=weight_decay,
                                            trust_coefficient=trust_coefficient,
                                            skip_adaptation_1d=skip_adaptation_1d,
-                                           use_pallas=use_pallas))
+                                           use_pallas=use_pallas,
+                                           slot_dtype=slot_dtype))

@@ -46,7 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +58,36 @@ Pytree = Any
 Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> learning rate
 
 tree_map = jax.tree_util.tree_map
+
+# Optimizer-state storage dtypes. "int8" stores every rule slot as int8
+# codes + per-group f32 scales (packed engine: per-row-block inside the
+# superbuffer; tree engine: per-leading-index per leaf) with
+# dequantize-on-read / quantize-on-write around the SAME rule functions,
+# so all four optimizers inherit 8-bit states from the substrate. The
+# master/weight buffers (MASTER_SLOT / WEIGHT_SLOT) always stay f32 —
+# quantizing weights would change trajectories, quantizing moments only
+# perturbs them.
+SLOT_DTYPES = ("f32", "int8")
+
+# Suffix of the per-group f32 scale slot paired with each int8 code slot
+# ("momentum" -> "momentum_scale"). A plain sibling key keeps the scales
+# visible to the generic slot machinery: npz checkpoints round-trip them
+# by name, sharding specs cover them, and shape mismatches fail loudly.
+SCALE_SUFFIX = "_scale"
+
+
+class PackedGrads(NamedTuple):
+    """Mean gradients already living in the (rows, lane) superbuffer.
+
+    :class:`~repro.train.pipeline.TrainPipeline`'s fused accumulation
+    epilogue accumulates microbatch gradients directly in packed form and
+    hands the result to ``Optimizer.update`` wrapped in this type; the
+    packed engine then skips its per-step gradient pack (and the Adam
+    family's separate grad^2 pack) and takes the trust-ratio norms from
+    the accumulated buffer in place.
+    """
+
+    buf: jnp.ndarray
 
 
 @functools.partial(jax.tree_util.register_dataclass,
@@ -116,6 +146,13 @@ class LayerwiseRule:
     packed_norms: Optional[Callable[..., tuple]] = None
     # (ctx, layout, wbuf, gbuf, ubuf, lr_slices, slots) -> (wbuf', slots'):
     packed_apply: Optional[Callable[..., tuple[jnp.ndarray, dict]]] = None
+    # int8-state Pallas override: same signature as packed_apply but
+    # ``slots`` holds RAW int8 codes + per-block scales (keys ``k`` and
+    # ``k + SCALE_SUFFIX``) and the returned slots are requantized
+    # in-kernel (dequant-update-requant in one launch, so the f32 slot
+    # buffer never materializes in HBM). Only valid for rules whose
+    # ``direction`` ignores its slots (trust_operand_is_grad family).
+    packed_apply_q8: Optional[Callable[..., tuple[jnp.ndarray, dict]]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,13 +221,19 @@ def _packed_update(rule: LayerwiseRule, layout: packing.PackedLayout, lr,
                    ctx: dict, grads: Pytree, slots: dict, params: Pytree,
                    use_pallas: bool,
                    master: Optional[jnp.ndarray] = None,
-                   weights: Optional[jnp.ndarray] = None
-                   ) -> tuple[Pytree, dict]:
+                   weights: Optional[jnp.ndarray] = None,
+                   slot_dtype: str = "f32") -> tuple[Pytree, dict]:
     """Flat-packed engine: whole-pytree buffers, per-slice scalars.
 
     ``use_pallas`` swaps the norms/apply passes for the rule's
     megakernels; the trust-ratio and adaptation-mask logic is computed
     here either way, so the two paths cannot drift.
+
+    ``grads`` may arrive as a param-shaped pytree OR as
+    :class:`PackedGrads` (the fused accumulation epilogue): the latter
+    skips the per-step gradient pack, takes the Adam family's g^2 from
+    the buffer directly, and reads the LARS trust norms off the
+    accumulated superbuffer in place.
 
     ``master``: optional f32 master-weight superbuffer. When given, the
     per-step params pack is skipped — the master IS the weight buffer —
@@ -202,6 +245,12 @@ def _packed_update(rule: LayerwiseRule, layout: packing.PackedLayout, lr,
     but the updated buffer is quantized through each segment's storage
     dtype so trajectories stay bit-identical to repacking every step.
     Only one of ``master`` / ``weights`` may be given.
+
+    ``slot_dtype="int8"`` dequantizes the rule slots (int8 codes +
+    per-block scales) to f32 on entry and requantizes the updated slots
+    on exit — unless the rule provides ``packed_apply_q8`` under
+    ``use_pallas``, in which case the raw codes go straight into the
+    fused dequant-update-requant kernel.
     """
     if master is not None:
         wbuf = master
@@ -209,35 +258,66 @@ def _packed_update(rule: LayerwiseRule, layout: packing.PackedLayout, lr,
         wbuf = weights
     else:
         wbuf = packing.pack(layout, params)
-    gbuf = packing.pack(layout, grads)
+    packed_grads = isinstance(grads, PackedGrads)
+    gbuf = grads.buf if packed_grads else packing.pack(layout, grads)
     if rule.needs_grad_sq:
         # square in f32 (pack would cast AFTER the square, and a bf16
-        # square then diverges from the tree engine's f32 one)
-        ctx = dict(ctx, grad_sq=packing.pack(
-            layout, tree_map(
-                lambda g: jnp.square(g.astype(jnp.float32)), grads)))
-    u, slots = rule.direction(ctx, gbuf, wbuf, dict(slots))
+        # square then diverges from the tree engine's f32 one). Squaring
+        # the packed buffer is elementwise-identical (0^2 == 0 in the
+        # padding), so the fused path needs no second pack.
+        ctx = dict(ctx, grad_sq=jnp.square(gbuf) if packed_grads
+                   else packing.pack(layout, tree_map(
+                       lambda g: jnp.square(g.astype(jnp.float32)), grads)))
+    quant = slot_dtype == "int8"
+    q8_kernel = quant and use_pallas and rule.packed_apply_q8 is not None
+    if quant:
+        # dequantize-on-read; the q8 kernel path instead consumes raw
+        # codes (its rules' direction ignores slots by contract)
+        f32_slots = {} if q8_kernel else {
+            k: packing.dequantize_q8(layout, slots[k],
+                                     slots[k + SCALE_SUFFIX])
+            for k in rule.slots}
+    else:
+        f32_slots = dict(slots)
+    u, f32_slots = rule.direction(ctx, gbuf, wbuf, f32_slots)
     ratio = None
     if rule.trust is not None:
         if use_pallas and rule.packed_norms is not None:
             w_norm, u_norm = rule.packed_norms(layout, wbuf, u)
         elif rule.trust_operand_is_grad:
             w_norm = jnp.sqrt(packing.slice_sumsq(layout, wbuf))
-            u_norm = jnp.sqrt(packing.tree_slice_sumsq(layout, grads))
+            # fused path: ||sum_i g_i|| must be taken on the ACCUMULATED
+            # buffer (cross terms make it impossible to accumulate from
+            # per-microbatch norms); the tree path keeps the per-leaf
+            # reductions that fuse with the gradient pack
+            u_norm = jnp.sqrt(packing.slice_sumsq(layout, gbuf)) \
+                if packed_grads \
+                else jnp.sqrt(packing.tree_slice_sumsq(layout, grads))
         else:
             w_norm, u_norm = packing.slice_norms(layout, wbuf, u)
         ratio = rule.trust(ctx, w_norm, u_norm)
         if rule.skip_adaptation_1d:
             ratio = jnp.where(packing.adapt_mask(layout), ratio, 1.0)
-    if use_pallas and rule.packed_apply is not None:
+    if use_pallas and (q8_kernel or rule.packed_apply is not None):
         ones = jnp.ones((layout.num_slices,), jnp.float32)
         lr_slices = lr * (ratio if ratio is not None else ones)
-        wbuf2, new_slots = rule.packed_apply(ctx, layout, wbuf, gbuf, u,
-                                             lr_slices, slots)
+        if q8_kernel:
+            wbuf2, new_slots = rule.packed_apply_q8(
+                ctx, layout, wbuf, gbuf, u, lr_slices, slots)
+        else:
+            wbuf2, new_slots = rule.packed_apply(
+                ctx, layout, wbuf, gbuf, u, lr_slices, f32_slots)
     else:
         local_lr = lr if ratio is None \
             else lr * packing.rows_expand(layout, ratio)
-        wbuf2, new_slots = rule.apply(ctx, wbuf, gbuf, u, local_lr, slots)
+        wbuf2, new_slots = rule.apply(ctx, wbuf, gbuf, u, local_lr,
+                                      f32_slots)
+    if quant and not q8_kernel:
+        # quantize-on-write: each updated rule slot back to codes+scales
+        for k in rule.slots:
+            q, s = packing.quantize_q8(layout, new_slots[k])
+            new_slots[k] = q
+            new_slots[k + SCALE_SUFFIX] = s
     if master is not None:
         new_slots[packing.MASTER_SLOT] = wbuf2
     else:
@@ -249,17 +329,47 @@ def _packed_update(rule: LayerwiseRule, layout: packing.PackedLayout, lr,
 
 
 def make_optimizer(rule: LayerwiseRule, learning_rate: float | Schedule, *,
-                   use_pallas: bool = False,
+                   use_pallas: bool | str = False,
+                   slot_dtype: str = "f32",
                    hyperparams: Optional[dict] = None) -> Optimizer:
     """Build an :class:`Optimizer` from a rule (the ONLY update body —
-    individual optimizers supply ~20-line rules, not engines)."""
+    individual optimizers supply ~20-line rules, not engines).
+
+    ``use_pallas="auto"`` resolves per backend (compiled megakernels on
+    TPU, the jnp engine elsewhere — interpret-mode Pallas on CPU is
+    ~100x slower than the fused jnp path, see BENCH_optimizer.json);
+    ``True``/``False`` force one path (tests, benchmarks).
+
+    ``slot_dtype="int8"`` stores every rule slot as int8 codes + f32
+    group scales (see :data:`SLOT_DTYPES`); the engines dequantize on
+    read and requantize on write, so the rule functions never see codes.
+    """
     lr_fn = as_schedule(learning_rate)
+    if slot_dtype not in SLOT_DTYPES:
+        raise ValueError(f"unknown slot_dtype {slot_dtype!r}; "
+                         f"have {SLOT_DTYPES}")
+    if use_pallas == "auto":
+        from repro.kernels import ops as kops
+        use_pallas = kops.resolve_use_pallas(use_pallas)
+    quant = slot_dtype == "int8"
 
     def init(params: Pytree, stacked: Optional[Pytree] = None,
              master: bool = False) -> OptState:
         step = jnp.zeros((), jnp.int32)
         if stacked is None:
-            slots = {k: zeros_like_tree(params) for k in rule.slots}
+            slots = {}
+            for k in rule.slots:
+                if quant:
+                    # quantized zeros: 0 codes, unit scales (the amax==0
+                    # guard) — exactly what requantizing f32 zeros gives,
+                    # so slot shapes/dtypes are stable from step 0
+                    packs = tree_map(
+                        lambda p: packing.quantize_leaf_q8(
+                            jnp.zeros(p.shape, jnp.float32)), params)
+                    slots[k], slots[k + SCALE_SUFFIX] = \
+                        _split_pair_tree(packs)
+                else:
+                    slots[k] = zeros_like_tree(params)
             if master:
                 slots[packing.MASTER_SLOT] = tree_map(
                     lambda p: p.astype(jnp.float32), params)
@@ -268,7 +378,13 @@ def make_optimizer(rule: LayerwiseRule, learning_rate: float | Schedule, *,
             params, normalize_stacked(params, stacked))
         zeros = functools.partial(jnp.zeros, layout.buffer_shape,
                                   jnp.float32)
-        slots = {k: zeros() for k in rule.slots}
+        slots = {}
+        for k in rule.slots:
+            if quant:
+                slots[k], slots[k + SCALE_SUFFIX] = \
+                    packing.quantize_q8(layout, zeros())
+            else:
+                slots[k] = zeros()
         if master:
             slots[packing.MASTER_SLOT] = packing.init_master(layout, params)
         else:
@@ -291,7 +407,8 @@ def make_optimizer(rule: LayerwiseRule, learning_rate: float | Schedule, *,
                 packing.check_marker(state.layout, params, stacked)
             new_params, new_slots = _packed_update(
                 rule, state.layout, lr, ctx, grads, slots, params,
-                use_pallas, master=master, weights=weights)
+                use_pallas, master=master, weights=weights,
+                slot_dtype=slot_dtype)
         else:
             if use_pallas:
                 raise ValueError(
@@ -299,15 +416,36 @@ def make_optimizer(rule: LayerwiseRule, learning_rate: float | Schedule, *,
                     "packed layout: build the state with init(params, "
                     "stacked=marker). Tree-layout states (init(params)) "
                     "run the per-leaf jnp reference path only.")
+            if isinstance(grads, PackedGrads):
+                raise ValueError(
+                    "PackedGrads requires the flat-packed layout; tree-"
+                    "layout states take param-shaped gradient pytrees")
             stacked_full = normalize_stacked(params, stacked)
+            if quant:
+                slots = {k: tree_map(packing.dequantize_leaf_q8, slots[k],
+                                     slots[k + SCALE_SUFFIX])
+                         for k in rule.slots}
             new_params, new_slots = _tree_update(
                 rule, lr, ctx, grads, slots, params, stacked_full,
                 master=master)
+            if quant:
+                for k in rule.slots:
+                    packs = tree_map(packing.quantize_leaf_q8,
+                                     new_slots[k])
+                    new_slots[k], new_slots[k + SCALE_SUFFIX] = \
+                        _split_pair_tree(packs)
         return new_params, OptState(step=state.step + 1, slots=new_slots,
                                     layout=state.layout)
 
     return Optimizer(name=rule.name, init=init, update=update,
                      hyperparams=dict(hyperparams or {}))
+
+
+def _split_pair_tree(packs: Pytree) -> tuple[Pytree, Pytree]:
+    """Tree of (a, b) tuples -> (tree of a, tree of b)."""
+    is_pair = lambda t: isinstance(t, tuple)  # noqa: E731
+    return (tree_map(lambda t: t[0], packs, is_leaf=is_pair),
+            tree_map(lambda t: t[1], packs, is_leaf=is_pair))
 
 
 # ------------------------------------------------------------------ helpers

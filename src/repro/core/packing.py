@@ -318,6 +318,70 @@ def unpack(layout: PackedLayout, buf: jnp.ndarray,
     return jax.tree_util.tree_unflatten(layout.treedef, leaves)
 
 
+# ------------------------------------------------- int8 slot quantization
+
+# Symmetric int8 range. +-127 (not -128) keeps the code symmetric around
+# zero so q == -q for negated buffers and dequantize(quantize(0)) == 0
+# exactly — zero padding rows stay exactly zero through a round trip.
+Q8_LEVELS = 127.0
+
+
+def _q8_scale(amax: jnp.ndarray) -> jnp.ndarray:
+    """absmax -> quantization scale, guarding all-zero groups (a zero
+    amax would otherwise divide 0/0; scale 1.0 round-trips zeros)."""
+    return jnp.where(amax > 0.0, amax / Q8_LEVELS, 1.0)
+
+
+def quantize_q8(layout: PackedLayout, buf: jnp.ndarray
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """f32 superbuffer -> (int8 codes (rows, lane), f32 scales
+    (num_blocks, 1)): symmetric absmax quantization per block_rows row
+    block. Slices are block-aligned (``build_layout`` pads each layer
+    slice to whole blocks), so every scale group lives inside ONE layer
+    slice — per-segment scales by construction, at a granularity of
+    block_rows * lane = 4096 values.
+    """
+    assert buf.shape == layout.buffer_shape, (buf.shape, layout.buffer_shape)
+    grouped = buf.astype(jnp.float32).reshape(layout.num_blocks, -1)
+    scale = _q8_scale(jnp.max(jnp.abs(grouped), axis=1, keepdims=True))
+    q = jnp.clip(jnp.round(grouped / scale), -Q8_LEVELS, Q8_LEVELS)
+    return (q.astype(jnp.int8).reshape(layout.buffer_shape), scale)
+
+
+def dequantize_q8(layout: PackedLayout, q: jnp.ndarray,
+                  scale: jnp.ndarray) -> jnp.ndarray:
+    """(int8 codes, per-block scales) -> f32 superbuffer."""
+    assert q.shape == layout.buffer_shape, (q.shape, layout.buffer_shape)
+    assert scale.shape == (layout.num_blocks, 1), scale.shape
+    grouped = q.reshape(layout.num_blocks, -1).astype(jnp.float32) * scale
+    return grouped.reshape(layout.buffer_shape)
+
+
+def quantize_leaf_q8(x: jnp.ndarray
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-leaf int8 quantization for the TREE engine: one scale per
+    leading index (shape ``(d0, 1, ..., 1)``; scalar leaves get a scalar
+    scale). The leading axis is the layer axis of stacked leaves, so
+    per-layer scale groups match the packed engine's per-segment
+    semantics; for unstacked matrices it is a per-output-row group. The
+    scale shape depends only on the leaf shape — NOT on the stacked
+    marker — so slot shapes are stable whether or not update() is
+    called with a marker.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    axes = tuple(range(1, x.ndim))
+    amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True) if x.ndim \
+        else jnp.abs(x)
+    scale = _q8_scale(amax)
+    q = jnp.clip(jnp.round(x / scale), -Q8_LEVELS, Q8_LEVELS)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_leaf_q8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Per-leaf inverse of :func:`quantize_leaf_q8` (broadcast multiply)."""
+    return q.astype(jnp.float32) * scale
+
+
 # -------------------------------------------------- per-slice reductions
 
 def slice_sumsq(layout: PackedLayout, buf: jnp.ndarray) -> jnp.ndarray:

@@ -19,7 +19,8 @@ from repro.core.optim_base import (LayerwiseRule, Optimizer, Schedule,
 
 
 def sgd(learning_rate: float | Schedule = 0.01, *, momentum: float = 0.9,
-        weight_decay: float = 1e-4, nesterov: bool = False) -> Optimizer:
+        weight_decay: float = 1e-4, nesterov: bool = False,
+        slot_dtype: str = "f32") -> Optimizer:
 
     def direction(ctx, g, w, slots):
         return g + weight_decay * w, slots
@@ -31,8 +32,9 @@ def sgd(learning_rate: float | Schedule = 0.01, *, momentum: float = 0.9,
 
     rule = LayerwiseRule(name="sgd", slots=("momentum",),
                          direction=direction, apply=apply, trust=None)
-    return make_optimizer(rule, learning_rate,
+    return make_optimizer(rule, learning_rate, slot_dtype=slot_dtype,
                           hyperparams=dict(learning_rate=learning_rate,
                                            momentum=momentum,
                                            weight_decay=weight_decay,
-                                           nesterov=nesterov))
+                                           nesterov=nesterov,
+                                           slot_dtype=slot_dtype))

@@ -222,10 +222,19 @@ def state_pspecs(cfg, state_shapes, mesh: Optional[Mesh] = None) -> Any:
     pspecs = param_pspecs(cfg, state_shapes.params, mesh)
     opt = state_shapes.opt_state
     if getattr(opt, "layout", None) is not None:
+        # generic over slot keys: covers the int8 code buffers and their
+        # (num_blocks, 1) scale siblings alongside the f32 superbuffers
         slot_specs = {k: P(None, None) for k in opt.slots}
         opt_spec = OptState(step=P(), slots=slot_specs, layout=opt.layout)
     else:
-        slot_specs = {k: pspecs for k in opt.slots}
+        from repro.core.optim_base import SCALE_SUFFIX
+        replicated = jax.tree_util.tree_map(
+            lambda _s: P(), pspecs, is_leaf=lambda s: isinstance(s, P))
+        # int8 scale trees mirror params structurally but not in shape
+        # (one scalar per leading index), so they cannot inherit the
+        # param specs — keep them replicated; they are tiny
+        slot_specs = {k: (replicated if k.endswith(SCALE_SUFFIX)
+                          else pspecs) for k in opt.slots}
         opt_spec = OptState(step=P(), slots=slot_specs)
     return TrainState(params=pspecs, opt_state=opt_spec)
 

@@ -57,9 +57,16 @@ def aggregate(grid: GridSpec, manifest: dict) -> dict:
     ablation cells stay separate columns instead of being averaged
     into fake replicates — the pair claims then need the plain labels
     and are skipped, which is correct: an ablation grid answers a
-    different question."""
+    different question.
+
+    When the grid varies the opt-state-dtype axis (the int8 parity
+    study), only the NON-default dtype joins the label (``lars@int8``)
+    — f32 twins keep plain labels so the family claims still compute
+    on the f32 baseline, and the parity claims (P*) compare each
+    ``opt@int8`` column against its plain twin at matched batch."""
     table_key, columns, headline, lower_better = FAMILY_METRICS[grid.family]
     multi_sched = len(set(grid.lr_schedules)) > 1
+    multi_dtype = len(set(grid.opt_state_dtypes)) > 1
     rows = [manifest["cells"][c.cell_id] for c in grid.cells()
             if c.cell_id in manifest["cells"]]
     by_cell: dict[tuple[str, int], list[dict]] = {}
@@ -67,6 +74,8 @@ def aggregate(grid: GridSpec, manifest: dict) -> dict:
         label = row["optimizer"]
         if multi_sched:
             label += "@" + row.get("lr_schedule", "inverse_time")
+        if multi_dtype and row.get("opt_state_dtype", "f32") != "f32":
+            label += "@" + row["opt_state_dtype"]
         by_cell.setdefault((label, row["batch"]), []).append(row)
 
     table: dict[str, dict[str, dict[str, float]]] = {}
@@ -78,6 +87,8 @@ def aggregate(grid: GridSpec, manifest: dict) -> dict:
 
     claims = (_cnn_claims(table) if grid.family == "cnn"
               else _lm_claims(table))
+    if multi_dtype:
+        claims.update(_parity_claims(table, headline, lower_better))
     slim_rows = [{k: v for k, v in row.items() if k != "layer_stats"}
                  for row in rows]
     return {
@@ -162,6 +173,43 @@ def _lm_claims(table: dict) -> dict:
         gen = min(ppl(large, "adamw"), ppl(large, "sgd"))
         out["L4_best_layerwise_beats_best_generic_at_largest"] = bool(
             lw <= gen)
+    return out
+
+
+# Parity bars for quantized optimizer states: int8 slots must land
+# within replicate-seed noise of their f32 twins. Accuracy metrics use
+# an absolute bar (2 points — the spread the smoke grids show between
+# replicate seeds), perplexity a relative one (5%).
+PARITY_ACC_ATOL = 0.02
+PARITY_PPL_RTOL = 0.05
+
+
+def _parity_claims(table: dict, headline: str, lower_better: bool) -> dict:
+    """int8-vs-f32 parity: every ``opt@int8`` column is checked against
+    its plain f32 twin at every batch where both exist. Emits the paired
+    headline metrics plus one aggregate ``P1`` bool (all pairs within
+    the family's parity bar)."""
+    out: dict = {}
+    pairs = []
+    for batch in sorted(table, key=int):
+        cells = table[batch]
+        for label in sorted(cells):
+            if not label.endswith("@int8"):
+                continue
+            base = label[:-len("@int8")]
+            if base not in cells:
+                continue
+            f32_v = cells[base][headline]
+            q8_v = cells[label][headline]
+            if lower_better:
+                ok = q8_v <= f32_v * (1.0 + PARITY_PPL_RTOL)
+            else:
+                ok = q8_v >= f32_v - PARITY_ACC_ATOL
+            pairs.append(ok)
+            out[f"{base}_b{batch}_{headline}_f32"] = f32_v
+            out[f"{base}_b{batch}_{headline}_int8"] = q8_v
+    if pairs:
+        out["P1_int8_matches_f32"] = bool(all(pairs))
     return out
 
 

@@ -87,6 +87,10 @@ class CellSpec:
     lr_schedule: str = "inverse_time"   # inverse_time | poly | poly_warmup
     warmup_frac: float = 0.1            # fraction of steps warmed up
     adam_base_lr: float = ADAM_INIT_LR  # lamb/adamw base LR
+    # optimizer-state storage dtype ("f32" | "int8"): int8 stores the
+    # momentum/moment slots as int8 codes + per-group f32 scales — the
+    # int8-vs-f32 parity axis of the quantized-state study
+    opt_state_dtype: str = "f32"
     # per-optimizer base-LR overrides ((name, lr) pairs): trust-ratio
     # optimizers take RELATIVE per-layer steps, so one base can't serve
     # both them and their generic counterparts — each optimizer gets a
@@ -108,14 +112,18 @@ class CellSpec:
                 f"-a{self.accum_steps}-{self.lr_policy}-s{self.seed}")
         if self.lr_schedule != "inverse_time":
             base += f"-{self.lr_schedule}"
+        if self.opt_state_dtype != "f32":
+            base += f"-{self.opt_state_dtype}"
         return base
 
     def cell_seed(self) -> int:
         """Deterministic rng seed from the cell's coordinates (CRC32 of
         the id string — stable across processes and grid edits, unlike
-        Python's salted ``hash``). The lr-schedule tag is deliberately
-        EXCLUDED: warmup-ablation cells share init + data stream so the
-        schedule is the only varying ingredient."""
+        Python's salted ``hash``). The lr-schedule and opt-state-dtype
+        tags are deliberately EXCLUDED: warmup-ablation cells share
+        init + data stream so the schedule is the only varying
+        ingredient, and int8-vs-f32 parity cells likewise differ ONLY
+        in the slot storage dtype."""
         key = (f"{self.grid}/{self.optimizer}-b{self.batch}"
                f"-{self.precision}-a{self.accum_steps}-{self.lr_policy}"
                f"-s{self.seed}")
@@ -168,18 +176,22 @@ class CellSpec:
         if self.optimizer == "sgd":
             return get_optimizer("sgd", learning_rate=lr,
                                  momentum=self.momentum,
-                                 weight_decay=self.weight_decay)
+                                 weight_decay=self.weight_decay,
+                                 slot_dtype=self.opt_state_dtype)
         if self.optimizer == "lars":
             return get_optimizer("lars", learning_rate=lr,
                                  momentum=self.momentum,
                                  weight_decay=self.weight_decay,
-                                 trust_coefficient=self.trust_coef)
+                                 trust_coefficient=self.trust_coef,
+                                 slot_dtype=self.opt_state_dtype)
         if self.optimizer == "lamb":
             return get_optimizer("lamb", learning_rate=lr,
-                                 weight_decay=self.weight_decay)
+                                 weight_decay=self.weight_decay,
+                                 slot_dtype=self.opt_state_dtype)
         if self.optimizer == "adamw":
             return get_optimizer("adamw", learning_rate=lr,
-                                 weight_decay=self.weight_decay)
+                                 weight_decay=self.weight_decay,
+                                 slot_dtype=self.opt_state_dtype)
         raise ValueError(f"unknown optimizer {self.optimizer!r}")
 
     def pipeline_key(self) -> tuple:
@@ -190,7 +202,7 @@ class CellSpec:
                 self.precision, self.lr_policy, self.base_lr,
                 self.base_batch, self.momentum, self.weight_decay,
                 self.trust_coef, self.lr_decay, self.lr_schedule,
-                self.warmup_frac, self.adam_base_lr,
+                self.warmup_frac, self.adam_base_lr, self.opt_state_dtype,
                 tuple(map(tuple, self.base_lr_overrides)), self.family,
                 self.seq_len, self.vocab_size, self.model_layers,
                 self.model_d_model, self.epochs, self.n_train)
@@ -229,6 +241,8 @@ class GridSpec:
     lr_decay: float = LR_DECAY
     warmup_frac: float = 0.1
     adam_base_lr: float = ADAM_INIT_LR
+    # optimizer-state storage dtypes to sweep (int8-vs-f32 parity axis)
+    opt_state_dtypes: tuple[str, ...] = ("f32",)
     base_lr_overrides: tuple = ()       # ((optimizer, base_lr), ...)
     # --- LM-family protocol (family="lm" only) ---
     seq_len: int = 0                    # training sequence length
@@ -253,11 +267,11 @@ class GridSpec:
             raise ValueError(
                 f"grid {self.name!r}: family='lm' requires seq_len > 0")
         out = []
-        for batch, opt, prec, accum, policy, sched, seed in \
+        for batch, opt, prec, accum, policy, sched, sdtype, seed in \
                 itertools.product(
                     self.batches, self.optimizers, self.precisions,
                     self.accum_steps, self.lr_policies, self.lr_schedules,
-                    self.seeds):
+                    self.opt_state_dtypes, self.seeds):
             if batch % accum:
                 raise ValueError(
                     f"grid {self.name!r}: batch {batch} not divisible by "
@@ -270,7 +284,7 @@ class GridSpec:
                 momentum=self.momentum, weight_decay=self.weight_decay,
                 trust_coef=self.trust_coef, lr_decay=self.lr_decay,
                 lr_schedule=sched, warmup_frac=self.warmup_frac,
-                adam_base_lr=self.adam_base_lr,
+                adam_base_lr=self.adam_base_lr, opt_state_dtype=sdtype,
                 base_lr_overrides=tuple(map(tuple,
                                             self.base_lr_overrides)),
                 family=self.family,
@@ -343,6 +357,19 @@ GRIDS: dict[str, GridSpec] = {
         batches=(64, 1024),
         precisions=("bf16",), accum_steps=(4,),
         lr_policies=("linear",), trust_coef=0.02,
+        epochs=8, n_train=2048, n_test=512),
+    # Int8-optimizer-state parity smoke: the accum+bf16 smoke cells run
+    # twice, once with f32 slots and once with int8 codes + per-group
+    # scales — same seeds, same data stream (opt_state_dtype is excluded
+    # from cell_seed), so the slot storage dtype is the ONLY varying
+    # ingredient. The claim check asserts int8 final test accuracy stays
+    # within noise of its f32 twin for every optimizer x batch.
+    "int8_parity_smoke": GridSpec(
+        name="int8_parity_smoke",
+        batches=(64, 1024),
+        precisions=("bf16",), accum_steps=(4,),
+        lr_policies=("linear",), trust_coef=0.02,
+        opt_state_dtypes=("f32", "int8"),
         epochs=8, n_train=2048, n_test=512),
     # The warmup ablation as grid cells (ROADMAP item): the large-batch
     # SGD cell with and without linear warmup under poly decay, LARS

@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.packing import Q8_LEVELS
+
 
 # --------------------------------------------------------------------- norms
 
@@ -111,3 +113,67 @@ def apply_flat(w2: jnp.ndarray, g2: jnp.ndarray, m2: jnp.ndarray,
         interpret=interpret,
     )(lr_blocks, w2, g2, m2)
     return w_new, m_new
+
+
+# ------------------------------------------------------------ int8 apply
+
+def _apply_q8_kernel(lr_ref, scale_ref, w_ref, g_ref, q_ref, wout_ref,
+                     qout_ref, sout_ref, *, momentum: float,
+                     weight_decay: float):
+    lr = lr_ref[0, 0]
+    wf = w_ref[...].astype(jnp.float32)
+    gf = g_ref[...].astype(jnp.float32)
+    # dequantize the int8 momentum block with its scale, update, then
+    # requantize against the block's fresh absmax — the f32 momentum
+    # exists only in VMEM, never in HBM
+    m = q_ref[...].astype(jnp.float32) * scale_ref[0, 0]
+    m_new = momentum * m + lr * (gf + weight_decay * wf)
+    wout_ref[...] = (wf - m_new).astype(wout_ref.dtype)
+    amax = jnp.max(jnp.abs(m_new))
+    s_new = jnp.where(amax > 0.0, amax / Q8_LEVELS, 1.0)
+    qout_ref[...] = jnp.clip(jnp.round(m_new / s_new),
+                             -Q8_LEVELS, Q8_LEVELS).astype(jnp.int8)
+    sout_ref[0, 0] = s_new
+
+
+def apply_flat_q8(w2: jnp.ndarray, g2: jnp.ndarray, q2: jnp.ndarray,
+                  scale: jnp.ndarray, lr_blocks: jnp.ndarray, *,
+                  momentum: float, weight_decay: float,
+                  block_rows: int = 8, interpret: bool = True
+                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """``apply_flat`` with the momentum stored as int8 codes + per-block
+    f32 scales: dequant-update-requant fused into the one launch.
+
+    q2: (R, C) int8 momentum codes; scale: (R // block_rows, 1) f32
+    per-block scales (the quantization groups of
+    :func:`repro.core.packing.quantize_q8` — one group per grid step).
+    Returns (w_new (R, C) in w2.dtype, q_new (R, C) int8, scale_new
+    (R // block_rows, 1) f32). Numerically identical to dequantizing,
+    running ``apply_flat``, and requantizing — the amax reduction and
+    round/clip are the same ops at the same f32 precision.
+
+    Compiled-TPU caveat: Mosaic's minimum int8 tile is (32, 128); the
+    default (8, 512) blocks compile via interpret on CPU but a TPU
+    deployment should raise block_rows to >= 32 for the int8 operands.
+    """
+    R, C = w2.shape
+    assert R % block_rows == 0, (R, block_rows)
+    nblk = R // block_rows
+    assert q2.shape == (R, C) and q2.dtype == jnp.int8, (q2.shape, q2.dtype)
+    assert scale.shape == (nblk, 1), (scale.shape, nblk)
+    assert lr_blocks.shape == (nblk, 1), (lr_blocks.shape, nblk)
+    blk = pl.BlockSpec((block_rows, C), lambda i: (i, 0))
+    one = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    kern = functools.partial(_apply_q8_kernel, momentum=momentum,
+                             weight_decay=weight_decay)
+    w_new, q_new, s_new = pl.pallas_call(
+        kern,
+        grid=(nblk,),
+        in_specs=[one, one, blk, blk, blk],
+        out_specs=[blk, blk, one],
+        out_shape=[jax.ShapeDtypeStruct((R, C), w2.dtype),
+                   jax.ShapeDtypeStruct((R, C), jnp.int8),
+                   jax.ShapeDtypeStruct((nblk, 1), jnp.float32)],
+        interpret=interpret,
+    )(lr_blocks, scale, w2, g2, q2)
+    return w_new, q_new, s_new

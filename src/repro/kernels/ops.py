@@ -32,6 +32,23 @@ BM = packing.BLOCK_ROWS  # sublane rows per block
 _interpret = fd.default_interpret
 
 
+def resolve_use_pallas(mode: bool | str) -> bool:
+    """Backend-aware dispatch for the optimizer megakernels.
+
+    ``"auto"`` (the :func:`repro.core.lars` default) selects the
+    compiled Pallas path only where it actually compiles — the TPU
+    backend. On CPU/GPU the kernels run through the Pallas interpreter
+    (239 ms/step vs ~2 ms for the fused jnp engine in
+    BENCH_optimizer.json), so "auto" resolves to the jnp path there —
+    the same policy :func:`flash_decode` applies via its ``interpret``
+    default. ``True``/``False`` force one path (kernel tests and
+    benchmarks pin the interpreter explicitly).
+    """
+    if mode == "auto":
+        return jax.default_backend() == "tpu"
+    return bool(mode)
+
+
 # ------------------------------------------------------------ packed kernels
 
 def lars_norms_packed(layout: packing.PackedLayout, wbuf: jnp.ndarray,
@@ -64,6 +81,22 @@ def lars_apply_packed(layout: packing.PackedLayout, wbuf: jnp.ndarray,
                                       lr_slices.astype(jnp.float32))
     return lars_kernels.apply_flat(
         wbuf, gbuf, mbuf, lr_blocks, momentum=momentum,
+        weight_decay=weight_decay, block_rows=layout.block_rows,
+        interpret=_interpret())
+
+
+def lars_apply_packed_q8(layout: packing.PackedLayout, wbuf: jnp.ndarray,
+                         gbuf: jnp.ndarray, q_m: jnp.ndarray,
+                         m_scale: jnp.ndarray, lr_slices: jnp.ndarray, *,
+                         momentum: float, weight_decay: float
+                         ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """``lars_apply_packed`` with int8 momentum codes + per-block scales:
+    the dequant-update-requant chain fused into the ONE apply launch.
+    Returns (w_new, q_new, scale_new)."""
+    lr_blocks = packing.blocks_expand(layout,
+                                      lr_slices.astype(jnp.float32))
+    return lars_kernels.apply_flat_q8(
+        wbuf, gbuf, q_m, m_scale, lr_blocks, momentum=momentum,
         weight_decay=weight_decay, block_rows=layout.block_rows,
         interpret=_interpret())
 

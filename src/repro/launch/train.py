@@ -80,6 +80,10 @@ def main() -> None:
                     "microbatches)")
     ap.add_argument("--accum-steps", type=int, default=1,
                     help="microbatches accumulated per optimizer update")
+    ap.add_argument("--opt-state-dtype", default="f32",
+                    choices=("f32", "int8"),
+                    help="optimizer slot storage: int8 codes + per-"
+                         "segment f32 scales (master weights stay f32)")
     ap.add_argument("--precision", default="f32", choices=("f32", "bf16"),
                     help="bf16: bf16 compute + f32 master weights")
     ap.add_argument("--mesh", default="auto",
@@ -108,7 +112,8 @@ def main() -> None:
     model = build_model(cfg)
     mesh = mesh_from_spec(args.mesh)
 
-    opt = get_optimizer(args.optimizer, learning_rate=make_lr_schedule(args))
+    opt = get_optimizer(args.optimizer, learning_rate=make_lr_schedule(args),
+                        slot_dtype=args.opt_state_dtype)
     pipeline = TrainPipeline(model, opt, cfg,
                              accum_steps=args.accum_steps,
                              precision=args.precision, mesh=mesh)

@@ -44,6 +44,8 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
+from repro.core.optim_base import PackedGrads
 from repro.train.state import TrainState
 from repro.train.step import _forward_and_loss
 
@@ -109,9 +111,13 @@ class TrainPipeline:
     def __init__(self, model, optimizer, cfg=None, *, accum_steps: int = 1,
                  precision: str | Precision = "f32", mesh=None,
                  donate: bool = True, packed: bool = True,
+                 fuse_update: bool | str = "auto",
                  stats_fn: Optional[Callable] = None):
         if accum_steps < 1:
             raise ValueError(f"accum_steps must be >= 1, got {accum_steps}")
+        if fuse_update not in (True, False, "auto"):
+            raise ValueError(f"fuse_update must be True/False/'auto', "
+                             f"got {fuse_update!r}")
         self.model = model
         self.optimizer = optimizer
         self.cfg = cfg if cfg is not None else model.cfg
@@ -120,6 +126,17 @@ class TrainPipeline:
         self.mesh = mesh
         self.donate = donate
         self.packed = packed
+        # Fused accumulation epilogue: with accum_steps > 1 and a
+        # flat-packed opt state, microbatch gradients accumulate directly
+        # in the (rows, lane) superbuffer inside the scan and the
+        # optimizer consumes the buffer in place (PackedGrads) — the
+        # per-layer grad norms finalize once on the accumulated buffer,
+        # eliminating the epilogue's full gradient pack (and the Adam
+        # family's second g^2 pack). "auto" fuses whenever it applies;
+        # disabled under a mesh (packing each microbatch inside the scan
+        # would force per-microbatch cross-shard gathers) and at
+        # accum_steps == 1, which stays bit-identical to make_train_step.
+        self.fuse_update = fuse_update
         # optional per-step telemetry computed INSIDE the jitted step on
         # (params, mean grads, stacked marker) — e.g. the per-layer
         # trust-ratio table from repro.core.grad_stats.stats_hook. The
@@ -172,9 +189,20 @@ class TrainPipeline:
         k = self.accum_steps
         compute_dtype = self.precision.compute_dtype
         stats_fn = self.stats_fn
+        fuse_mode, mesh = self.fuse_update, self.mesh
 
         def step(state: TrainState, batch) -> tuple[TrainState, dict]:
             batch = cast_floats(batch, compute_dtype)
+            # layout is OptState METADATA — a static Python value at
+            # trace time, so the fuse decision shapes the traced graph
+            layout = state.opt_state.layout
+            fuse = (fuse_mode is not False and k > 1 and mesh is None
+                    and layout is not None)
+            if fuse_mode is True and not fuse:
+                raise ValueError(
+                    "fuse_update=True needs accum_steps > 1, a flat-"
+                    "packed opt state and no mesh; use fuse_update="
+                    "'auto' to fall back silently")
 
             def loss_fn(params, mb):
                 return _forward_and_loss(model, cfg, params, mb)
@@ -193,14 +221,25 @@ class TrainPipeline:
                 def body(carry, mb):
                     gsum, lsum, asum = carry
                     (loss, (_, aux)), g = grad_fn(state.params, mb)
-                    gsum = tree_map(
-                        lambda a, gi: a + gi.astype(jnp.float32), gsum, g)
+                    if fuse:
+                        # accumulate in packed form: pack casts to f32
+                        # BEFORE adding, so every element sees the same
+                        # f32 addition chain as the tree carry below —
+                        # the accumulated buffer is bit-identical to
+                        # pack(tree-accumulated grads)
+                        gsum = gsum + packing.pack(layout, g)
+                    else:
+                        gsum = tree_map(
+                            lambda a, gi: a + gi.astype(jnp.float32),
+                            gsum, g)
                     asum = asum + aux.get("aux_loss",
                                           jnp.zeros((), jnp.float32))
                     return (gsum, lsum + loss, asum), None
 
-                zeros = tree_map(
-                    lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+                zeros = jnp.zeros(layout.buffer_shape, jnp.float32) \
+                    if fuse else tree_map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32),
+                        state.params)
                 carry0 = (zeros, jnp.zeros((), jnp.float32),
                           jnp.zeros((), jnp.float32))
                 (gsum, lsum, asum), _ = jax.lax.scan(body, carry0, micro)
@@ -209,7 +248,8 @@ class TrainPipeline:
                 # gradient, so the (single) LARS trust ratio matches a
                 # one-shot step on the whole global batch.
                 inv = 1.0 / k
-                grads = tree_map(lambda g: g * inv, gsum)
+                grads = PackedGrads(gsum * inv) if fuse \
+                    else tree_map(lambda g: g * inv, gsum)
                 loss, aux_loss = lsum * inv, asum * inv
 
             new_params, new_opt = optimizer.update(
@@ -217,7 +257,11 @@ class TrainPipeline:
             metrics = {"loss": loss, "aux_loss": aux_loss,
                        "step": new_opt.step}
             if stats_fn is not None:
-                metrics["stats"] = stats_fn(state.params, grads, stacked)
+                stat_grads = packing.unpack(layout, grads.buf,
+                                            dtype=jnp.float32) \
+                    if isinstance(grads, PackedGrads) else grads
+                metrics["stats"] = stats_fn(state.params, stat_grads,
+                                            stacked)
             return TrainState(new_params, new_opt), metrics
 
         return step

@@ -181,6 +181,47 @@ def test_interrupted_grid_resumes_to_identical_trajectories(tmp_path):
         assert a == b, cid
 
 
+def test_interrupted_int8_grid_resumes_byte_identical(tmp_path):
+    """The kill/resume contract with quantized optimizer state under
+    the full large-batch stack (bf16 compute, accum=4, int8 momentum):
+    the npz checkpoint carries raw int8 codes + f32 scales, and the
+    resumed run's JSONL trajectories equal the uninterrupted run's
+    EXACTLY — requantization is deterministic, so restoring codes
+    reproduces the same byte stream."""
+    import dataclasses
+    grid = dataclasses.replace(
+        TINY, name="tiny_int8_grid", batches=(32,),
+        precisions=("bf16",), accum_steps=(4,),
+        opt_state_dtypes=("int8",))
+    ref_dir = tmp_path / "ref"
+    _run(ref_dir, grid=grid)
+    ref = _trajectories(ref_dir, grid)
+
+    # 16 steps/cell; kill at 22 = mid-cell-1 step 6, past the step-4
+    # checkpoint
+    int_dir = tmp_path / "interrupted"
+    os.environ[ABORT_ENV] = "22"
+    try:
+        with pytest.raises(KeyboardInterrupt):
+            GridRunner(grid, str(int_dir), log=None, record_memory=False,
+                       checkpoint_every=4).run()
+    finally:
+        os.environ.pop(ABORT_ENV, None)
+    ckpt = os.path.join(str(int_dir), grid.cells()[1].cell_id,
+                        "state.npz")
+    assert os.path.exists(ckpt)
+    # the checkpoint stores the momentum as raw int8 codes
+    with np.load(ckpt) as arrs:
+        assert any(arrs[k].dtype == np.int8 for k in arrs.files), \
+            "no int8 slot in the mid-cell checkpoint"
+
+    manifest = GridRunner(grid, str(int_dir), log=None,
+                          record_memory=False,
+                          checkpoint_every=4).run(resume=True)
+    assert set(manifest["cells"]) == {c.cell_id for c in grid.cells()}
+    assert _trajectories(int_dir, grid) == ref
+
+
 def test_single_cell_selection(tmp_path):
     runner = GridRunner(TINY, str(tmp_path), log=None,
                         record_memory=False)
@@ -422,3 +463,50 @@ def test_lm_smoke_grid_end_to_end_claims():
     for key in ("L2_lamb_le_adamw_at_largest_batch",
                 "L4_best_layerwise_beats_best_generic_at_largest"):
         assert isinstance(claims[key], bool)  # recorded, not asserted
+
+
+def test_report_int8_parity_labels_and_claim():
+    """Aggregation of a dtype-varying grid: int8 cells get their own
+    ``opt@int8`` columns (f32 twins keep plain labels so the family
+    claims still compute), and the P1 parity claim holds exactly when
+    every int8 headline metric sits within the parity bar of its f32
+    twin."""
+    grid = get_grid("int8_parity_smoke")
+
+    def manifest(int8_acc):
+        rows = {}
+        for c in grid.cells():
+            r = dict(c.to_json())
+            r.update(test_acc=0.97 if c.opt_state_dtype == "f32"
+                     else int8_acc, train_acc=0.99, gen_error=0.02)
+            rows[c.cell_id] = r
+        return {"cells": rows}
+
+    payload = aggregate(grid, manifest(0.962))
+    table = payload["accuracy_vs_batch"]
+    assert set(table["64"]) == {"sgd", "lars", "sgd@int8", "lars@int8"}
+    claims = payload["claims"]
+    assert claims["P1_int8_matches_f32"] is True
+    assert claims["lars_b1024_test_acc_int8"] == 0.962
+    assert "C3_lars_ge_sgd_at_largest_batch" in claims  # f32 baseline
+    # int8 falling past the parity bar flips the claim
+    bad = aggregate(grid, manifest(0.93))
+    assert bad["claims"]["P1_int8_matches_f32"] is False
+
+
+@pytest.mark.tier2
+def test_int8_parity_smoke_grid_end_to_end_claim():
+    """The registered int8-vs-f32 parity grid (the accum+bf16 smoke
+    cells, momentum stored as int8 codes + scales on the int8 side):
+    completes on CPU and the quantized cells' final test accuracy stays
+    within the parity bar of their f32 twins at every optimizer x
+    batch."""
+    report = _smoke_report("REPRO_INT8_PARITY_REPORT",
+                           "int8_parity_smoke",
+                           "EXPERIMENTS_int8_parity_smoke.json")
+    assert report["completed_cells"] == report["total_cells"] == 8
+    claims = report["claims"]
+    assert claims["P1_int8_matches_f32"] is True
+    for opt in ("lars", "sgd"):
+        for b in (64, 1024):
+            assert f"{opt}_b{b}_test_acc_int8" in claims

@@ -40,6 +40,7 @@ GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
 # (family, optimizer, batch) — family selects workload + golden file.
 RUNS = [("cnn", "sgd", 32), ("cnn", "sgd", 128),
         ("cnn", "lars", 32), ("cnn", "lars", 128),
+        ("cnn", "lars_int8", 32),
         ("lm", "lamb", 32), ("lm", "adamw", 32)]
 STEPS = 20
 LR = 0.05
@@ -74,6 +75,15 @@ MESH_TRUST_RTOL = 0.1
 RTOL = RTOLS[("cnn", 32)]  # the tight pin the perturbation tests probe
 
 
+def _tols(family: str, opt_name: str, batch: int) -> tuple[float, float]:
+    """(loss rtol, trust rtol) for one pinned run. The int8-momentum pin
+    (lars_int8) shares the b32 class bars: requantization is a
+    deterministic elementwise map, and the measured 1-vs-8-forced-device
+    drift matches the f32 b32 runs (~1e-7 relative — the small convs
+    never split across thread partitions, so no code ever flips)."""
+    return RTOLS[(family, batch)], TRUST_RTOLS[(family, batch)]
+
+
 def _golden_path(family: str, opt_name: str, batch: int) -> str:
     tag = f"{opt_name}_lm_b{batch}" if family == "lm" \
         else f"{opt_name}_b{batch}"
@@ -86,6 +96,11 @@ def _make_opt(opt_name: str, lr: float):
     if opt_name == "lars":
         return lars(lr, momentum=0.9, weight_decay=WEIGHT_DECAY,
                     trust_coefficient=TRUST_COEF)
+    if opt_name == "lars_int8":
+        # the quantized-state pin: same rule, momentum stored as int8
+        # codes + per-block scales (requantized every step)
+        return lars(lr, momentum=0.9, weight_decay=WEIGHT_DECAY,
+                    trust_coefficient=TRUST_COEF, slot_dtype="int8")
     if opt_name == "lamb":
         return lamb(lr, weight_decay=WEIGHT_DECAY)
     return adamw(lr, weight_decay=WEIGHT_DECAY)
@@ -177,9 +192,9 @@ def _load_golden(family: str, opt_name: str, batch: int) -> dict:
 @pytest.mark.parametrize("family,opt_name,batch", RUNS)
 def test_golden_trajectory(family, opt_name, batch):
     got = run_trajectory(family, opt_name, batch)
+    rtol, trust_rtol = _tols(family, opt_name, batch)
     _compare(got, _load_golden(family, opt_name, batch),
-             rtol=RTOLS[(family, batch)],
-             trust_rtol=TRUST_RTOLS[(family, batch)],
+             rtol=rtol, trust_rtol=trust_rtol,
              label=f"{family}/{opt_name}/b{batch}")
 
 
@@ -189,13 +204,12 @@ def _assert_perturbation_breaks(family: str, opt_name: str, batch: int,
     got = run_trajectory(family, opt_name, batch, lr=lr + 1e-3)
     rel = np.abs(np.asarray(got["losses"]) - np.asarray(golden["losses"])) \
         / np.abs(np.asarray(golden["losses"]))
-    rtol = RTOLS[(family, batch)]
+    rtol, trust_rtol = _tols(family, opt_name, batch)
     assert rel.max() > 10 * rtol, (
         f"lr+1e-3 only moved {family}/{opt_name} losses by "
         f"{rel.max():.2e} relative — the {rtol} tolerance has no teeth")
     with pytest.raises(AssertionError):
-        _compare(got, golden, rtol=rtol,
-                 trust_rtol=TRUST_RTOLS[(family, batch)],
+        _compare(got, golden, rtol=rtol, trust_rtol=trust_rtol,
                  label=f"perturbed {family}/{opt_name}")
 
 
@@ -208,6 +222,13 @@ def test_lr_perturbation_breaks_the_pin():
 def test_lm_lr_perturbation_breaks_the_pin():
     """Same teeth check for the token-LM family's LAMB pin."""
     _assert_perturbation_breaks("lm", "lamb", 32, LM_LR)
+
+
+def test_int8_lr_perturbation_breaks_the_pin():
+    """Teeth check for the quantized-momentum pin: the int8 trajectory
+    must still resolve an lr perturbation above its tolerance —
+    quantization noise does not wash out the pin's sensitivity."""
+    _assert_perturbation_breaks("cnn", "lars_int8", 32, LR)
 
 
 _SUBPROC_MARKER = "REPRO_GOLDEN_SUBPROC"
@@ -236,10 +257,10 @@ def _check_main() -> int:
     failures = []
     for family, opt_name, batch in RUNS:
         got = run_trajectory(family, opt_name, batch)
+        rtol, trust_rtol = _tols(family, opt_name, batch)
         try:
             _compare(got, _load_golden(family, opt_name, batch),
-                     rtol=RTOLS[(family, batch)],
-                     trust_rtol=TRUST_RTOLS[(family, batch)],
+                     rtol=rtol, trust_rtol=trust_rtol,
                      label=f"{family}/{opt_name}/b{batch}")
             print(f"ok {family}/{opt_name}/b{batch}")
         except AssertionError as e:

@@ -93,6 +93,76 @@ def test_accum_k_matches_single_step_on_full_batch(accum):
                                    rtol=1e-4, atol=1e-7)
 
 
+@pytest.mark.parametrize("opt_name", ["lars", "lamb"])
+def test_fused_epilogue_matches_two_pass(opt_name):
+    """fuse_update=True (update reads the scan-accumulated superbuffer
+    in place, per-layer grad norms finalized once on it) vs
+    fuse_update=False (unpack to a mean-grad pytree, then the two-pass
+    update): identical up to summation order in the LARS grad norm
+    (measured <= 6e-8 param drift over 4 steps at accum=4; LAMB/SGD are
+    bit-identical — pack is linear and exact in f32)."""
+    from repro.core import lamb as make_lamb
+    cfg, model = _lenet()
+    opt = lars(0.05, trust_coefficient=0.01) if opt_name == "lars" \
+        else make_lamb(0.01)
+    batch = _mnist_batch(64, seed=3)
+    states, metrics = {}, {}
+    for fuse in (True, False):
+        pipe = TrainPipeline(model, opt, cfg, accum_steps=4, donate=False,
+                             fuse_update=fuse)
+        s = pipe.init_state(jax.random.key(4))
+        for _ in range(4):
+            s, m = pipe(s, batch)
+        states[fuse], metrics[fuse] = s, m
+    np.testing.assert_allclose(float(metrics[True]["loss"]),
+                               float(metrics[False]["loss"]), rtol=1e-6)
+    for a, b in zip(_leaves(states[True].params),
+                    _leaves(states[False].params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_fused_epilogue_matches_two_pass_bf16_int8():
+    """The full large-batch stack — bf16 compute, f32 master, int8
+    momentum — fused vs two-pass at accum=4 stays within the same
+    tolerance class (quantized slots see identical inputs either way;
+    only the LARS norm summation order differs)."""
+    cfg, model = _lenet()
+    opt = lars(0.05, trust_coefficient=0.01, slot_dtype="int8")
+    batch = _mnist_batch(64, seed=5)
+    losses = {}
+    params = {}
+    for fuse in (True, False):
+        pipe = TrainPipeline(model, opt, cfg, accum_steps=4,
+                             precision="bf16", donate=False,
+                             fuse_update=fuse)
+        s = pipe.init_state(jax.random.key(6))
+        for _ in range(4):
+            s, m = pipe(s, batch)
+        losses[fuse], params[fuse] = float(m["loss"]), s.params
+    np.testing.assert_allclose(losses[True], losses[False], rtol=1e-5)
+    for a, b in zip(_leaves(params[True]), _leaves(params[False])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_fuse_update_validation():
+    """fuse_update=True demands the conditions the fusion needs (packed
+    layout, accum>1, no mesh); "auto" silently falls back instead."""
+    cfg, model = _lenet()
+    with pytest.raises(ValueError, match="fuse_update"):
+        TrainPipeline(model, lars(0.05), cfg, fuse_update="sometimes")
+    pipe = TrainPipeline(model, lars(0.05), cfg, accum_steps=1,
+                         fuse_update=True)
+    with pytest.raises(ValueError, match="accum"):
+        pipe(pipe.init_state(jax.random.key(0)), _mnist_batch(32))
+    # auto at accum=1 runs the unfused (bit-identity) path fine
+    pipe = TrainPipeline(model, lars(0.05), cfg, accum_steps=1,
+                         donate=False)
+    pipe(pipe.init_state(jax.random.key(0)), _mnist_batch(32))
+
+
 def test_accum_requires_divisible_batch():
     cfg, model = _lenet()
     pipe = TrainPipeline(model, lars(0.05), cfg, accum_steps=3)
