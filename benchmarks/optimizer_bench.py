@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.core import adamw, lamb, lars, packing, sgd
 from repro.core.optim_base import PackedGrads
+from repro.kernels import ops
 from repro.kernels.introspect import count_pallas_launches
 
 
@@ -316,13 +317,22 @@ def main() -> None:
             ratios[name] = ratio
         for path in paths:
             dt, launches = timed[path]
+            # rows that actually launch Pallas kernels are tagged with
+            # how those kernels ran on this backend: "compiled" (TPU) or
+            # "interpret" (the CPU/GPU Pallas interpreter — a
+            # correctness path whose timings must never gate perf)
+            mode = (None if launches == 0 else
+                    ("compiled" if ops.resolve_use_pallas("auto")
+                     else "interpret"))
             records.append({"optimizer": name, "path": path,
                             "ms_per_step": dt * 1e3,
                             "pallas_launches": launches,
+                            "pallas_mode": mode,
                             "gparam_per_s": n / dt / 1e9})
             print(f"{name:12s} {path:12s} {dt*1e3:8.2f} ms/step "
                   f"{launches:3d} launches "
-                  f"({n / dt / 1e9:6.2f} Gparam/s)", flush=True)
+                  f"({n / dt / 1e9:6.2f} Gparam/s)"
+                  + (f" [{mode}]" if mode else ""), flush=True)
 
     by = {(r["optimizer"], r["path"]): r["ms_per_step"] for r in records}
     base = by[("sgd", "per-leaf")]
@@ -341,7 +351,13 @@ def main() -> None:
     # (lars+pallas is excluded: on CPU the Mosaic kernels run in
     # interpret mode, which is a correctness path, not a perf path.)
     if jax.default_backend() == "cpu":
+        # interpret-mode rows are correctness runs of the TPU kernels —
+        # structurally excluded from every perf assertion
+        interpret = {r["optimizer"] for r in records
+                     if r.get("pallas_mode") == "interpret"}
         for name, ratio in ratios.items():
+            if name in interpret:
+                continue
             assert ratio["min_pair"] <= 2.0, (
                 f"flat-packed {name} is {ratio['min_pair']:.2f}x the "
                 f"per-leaf path even in its cleanest load-paired sample "

@@ -2,8 +2,15 @@
 
 Drives :class:`repro.serve.ServeEngine` with a stream of staggered
 heterogeneous requests (prompt/output lengths drawn from ranges, Poisson
-arrivals in engine-step time) and reports per-request latency/TTFT plus
-aggregate throughput and slot occupancy.
+arrivals in engine-step time) and reports per-request latency/TTFT
+percentiles plus aggregate throughput and slot occupancy.
+
+``--session N`` switches to multi-turn session traffic: N concurrent
+sessions, ``--turns`` turns each, every turn extending its session's
+history (shared system prompt + prior turns + prior outputs). With
+``--prefix-entries`` the radix prefix index serves each turn's history
+from the prefix store, so only the new user tokens are prefilled — the
+per-turn prefix hit rate is reported.
 
 Examples::
 
@@ -11,6 +18,9 @@ Examples::
         --slots 8 --capacity 128 --requests 32 --sampler top_k:40:0.8
     PYTHONPATH=src python -m repro.launch.serve --arch zamba2-7b --reduced \
         --mesh 4x2 --slots 8
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
+        --session 4 --turns 3 --shared-prefix 64 --prefix-entries 16 \
+        --prefill-chunk 16
 """
 
 from __future__ import annotations
@@ -50,20 +60,71 @@ def serve_traffic(engine: ServeEngine, traffic) -> dict:
         finished.extend(engine.step())
         tick += 1
     wall = time.perf_counter() - t0
+    return dict(_aggregate(finished, wall, engine), finished=finished)
+
+
+def _aggregate(finished, wall, engine) -> dict:
     lat = np.asarray([f.latency for f in finished])
     ttft = np.asarray([f.ttft for f in finished])
     toks = int(sum(f.tokens.size for f in finished))
+
+    def pct(a, q):
+        return float(np.percentile(a, q)) if len(a) else 0.0
+
     return {
         "requests": len(finished), "tokens": toks, "wall_s": wall,
         "tok_per_s": toks / wall if wall else 0.0,
         "occupancy": engine.occupancy,
         "latency_mean_s": float(lat.mean()) if len(lat) else 0.0,
-        "latency_p90_s": float(np.percentile(lat, 90)) if len(lat) else 0.0,
+        "latency_p50_s": pct(lat, 50), "latency_p90_s": pct(lat, 90),
+        "latency_p99_s": pct(lat, 99),
         "ttft_mean_s": float(ttft.mean()) if len(ttft) else 0.0,
+        "ttft_p50_s": pct(ttft, 50), "ttft_p90_s": pct(ttft, 90),
+        "ttft_p99_s": pct(ttft, 99),
         "decode_steps": engine.stats["decode_steps"],
         "decode_traces": engine.traces["decode"],
-        "finished": finished,
     }
+
+
+def run_sessions(engine: ServeEngine, cfg, args, rng) -> dict:
+    """Multi-turn session traffic: every turn submits each session's
+    full history (system prompt + turns + outputs) and drains; with a
+    prefix store, the history is restored from the radix index and only
+    the fresh user tokens are prefilled."""
+    sys_prompt = rng.integers(0, cfg.vocab_size,
+                              (args.shared_prefix,)).astype(np.int32)
+    hist = [sys_prompt.copy() for _ in range(args.session)]
+    finished_all, per_turn = [], []
+    t0 = time.perf_counter()
+    for _turn in range(args.turns):
+        hits0 = engine.stats["prefix_hits"]
+        hit_toks0 = engine.stats["prefix_hit_tokens"]
+        rids = []
+        for s in range(args.session):
+            user = rng.integers(
+                0, cfg.vocab_size,
+                (int(rng.integers(args.prompt_min, args.prompt_max + 1)),)
+            ).astype(np.int32)
+            hist[s] = np.concatenate([hist[s], user])
+            new = int(rng.integers(args.new_min, args.new_max + 1))
+            rids.append(engine.submit(hist[s], new))
+        by_rid = {f.request.rid: f for f in engine.run([])}
+        for s, rid in enumerate(rids):
+            f = by_rid[rid]
+            hist[s] = np.concatenate([hist[s], f.tokens.astype(np.int32)])
+            finished_all.append(f)
+        per_turn.append({
+            "prefix_hits": engine.stats["prefix_hits"] - hits0,
+            "prefix_hit_tokens":
+                engine.stats["prefix_hit_tokens"] - hit_toks0,
+            "submitted": len(rids)})
+    wall = time.perf_counter() - t0
+    rep = dict(_aggregate(finished_all, wall, engine),
+               finished=finished_all, per_turn=per_turn)
+    if engine.pool is not None:
+        rep["prefix"] = dict(engine.pool.stats,
+                             hit_rate=engine.pool.hit_rate)
+    return rep
 
 
 def main() -> None:
@@ -86,6 +147,21 @@ def main() -> None:
     ap.add_argument("--use-flash", action="store_true",
                     help="force the Pallas flash-decode kernel (default: "
                     "auto — compiled on TPU, jnp core elsewhere)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: advance each admission by "
+                    "this many tokens per engine tick (0 = monolithic)")
+    ap.add_argument("--prefix-entries", type=int, default=0,
+                    help="prefix-store entries for the radix prefix "
+                    "index (0 = disabled)")
+    ap.add_argument("--prefix-min-tokens", type=int, default=4,
+                    help="shortest prefix worth snapshotting")
+    ap.add_argument("--session", type=int, default=0,
+                    help="N concurrent multi-turn sessions sharing a "
+                    "system prompt (0 = plain synthetic traffic)")
+    ap.add_argument("--turns", type=int, default=3,
+                    help="turns per session (with --session)")
+    ap.add_argument("--shared-prefix", type=int, default=64,
+                    help="shared system-prompt length (with --session)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--arrival-every", type=float, default=2.0,
                     help="mean engine steps between arrivals (Poisson)")
@@ -110,23 +186,48 @@ def main() -> None:
         sampler=parse_sampler(args.sampler),
         mesh=mesh_from_spec(args.mesh, allow_none=True),
         use_flash=args.use_flash or None,
-        prefill_bucket=args.prefill_bucket, seed=args.seed)
+        prefill_bucket=args.prefill_bucket,
+        prefill_chunk=args.prefill_chunk or None,
+        prefix_entries=args.prefix_entries,
+        prefix_min_tokens=args.prefix_min_tokens, seed=args.seed)
 
     rng = np.random.default_rng(args.seed)
-    traffic = synth_requests(cfg, args, rng)
-    rep = serve_traffic(engine, traffic)
+    if args.session:
+        rep = run_sessions(engine, cfg, args, rng)
+    else:
+        traffic = synth_requests(cfg, args, rng)
+        rep = serve_traffic(engine, traffic)
 
     print(f"\n{cfg.name} ({cfg.family}) — slots={args.slots} "
           f"capacity={args.capacity} sampler={args.sampler} "
-          f"mesh={args.mesh}")
+          f"mesh={args.mesh}"
+          + (f" prefill_chunk={args.prefill_chunk}"
+             if args.prefill_chunk else "")
+          + (f" prefix_entries={args.prefix_entries}"
+             if args.prefix_entries else ""))
     print(f"  {rep['requests']} requests, {rep['tokens']} tokens in "
           f"{rep['wall_s']:.2f}s -> {rep['tok_per_s']:.0f} tok/s, "
           f"occupancy {rep['occupancy']:.2f}")
-    print(f"  latency mean {rep['latency_mean_s']*1e3:.0f} ms / p90 "
-          f"{rep['latency_p90_s']*1e3:.0f} ms, TTFT mean "
-          f"{rep['ttft_mean_s']*1e3:.0f} ms")
+    print(f"  latency mean {rep['latency_mean_s']*1e3:.0f} ms / p50 "
+          f"{rep['latency_p50_s']*1e3:.0f} / p90 "
+          f"{rep['latency_p90_s']*1e3:.0f} / p99 "
+          f"{rep['latency_p99_s']*1e3:.0f} ms")
+    print(f"  TTFT    mean {rep['ttft_mean_s']*1e3:.0f} ms / p50 "
+          f"{rep['ttft_p50_s']*1e3:.0f} / p90 "
+          f"{rep['ttft_p90_s']*1e3:.0f} / p99 "
+          f"{rep['ttft_p99_s']*1e3:.0f} ms")
     print(f"  decode steps {rep['decode_steps']} — traced "
           f"{rep['decode_traces']}x (one jitted call per token)")
+    if args.session:
+        for t, row in enumerate(rep["per_turn"]):
+            print(f"  turn {t}: {row['submitted']} requests, "
+                  f"{row['prefix_hits']} prefix hits "
+                  f"({row['prefix_hit_tokens']} tokens served from the "
+                  f"prefix store)")
+        if "prefix" in rep:
+            print(f"  prefix hit rate {rep['prefix']['hit_rate']:.2f} "
+                  f"({rep['prefix']['hits']}/{rep['prefix']['hits'] + rep['prefix']['misses']} lookups, "
+                  f"{rep['prefix']['evictions']} evictions)")
     for f in rep["finished"][:8]:
         print(f"    req {f.request.rid:3d}: prompt {f.request.prompt_len:3d} "
               f"-> {f.tokens.size:3d} tok, latency "

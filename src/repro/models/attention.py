@@ -71,9 +71,11 @@ def qkv_project(cfg, p, x, positions, *, rope: bool = True):
 
 
 def _block_mask(qp, kp, *, causal, window, prefix_len, kv_len):
-    """(..., Sq, Kc) bool. qp (..., Sq), kp (Kc,) absolute positions."""
+    """(..., Sq, Kc) bool. qp (..., Sq), kp (Kc,) or (..., Kc) absolute
+    positions (2-D kp: per-row KV positions — the chunk-resume path,
+    where ring occupants depend on each row's resume offset)."""
     qp = qp[..., :, None]
-    kp_b = kp[None, :]
+    kp_b = kp[..., None, :] if kp.ndim > 1 else kp[None, :]
     if causal:
         ok = kp_b <= qp
         if prefix_len is not None:
@@ -156,9 +158,13 @@ def attention_core(q, k, v, *, q_positions, kv_positions=None,
     qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D)
     k_r = k.reshape(B, nk, kc, Hkv, D)
     v_r = v.reshape(B, nk, kc, Hkv, Dv)
-    kp_r = kv_positions.reshape(nk, kc) if kv_positions.ndim == 1 else None
-    if kp_r is None:
-        raise ValueError("kv_positions must be 1-D absolute positions")
+    if kv_positions.ndim == 1:
+        kp_r = kv_positions.reshape(nk, kc)
+    elif nk == 1:
+        kp_r = None                            # (B, Sk) per-row positions
+    else:
+        raise ValueError("2-D kv_positions need kv_chunk >= Sk "
+                         "(single-block attention)")
 
     if q_positions.ndim == 1:
         q_positions = jnp.broadcast_to(q_positions[None], (B, Sq))
@@ -187,8 +193,9 @@ def attention_core(q, k, v, *, q_positions, kv_positions=None,
     l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
     acc0 = jnp.zeros((B, Hkv, G, Sq, Dv), jnp.float32)
     if nk == 1:   # single block: no scan (keeps sharded-KV decode local)
+        kp0 = kv_positions if kp_r is None else kp_r[0]
         (m, l, acc), _ = step((m0, l0, acc0),
-                              (k_r[:, 0], v_r[:, 0], kp_r[0]))
+                              (k_r[:, 0], v_r[:, 0], kp0))
     else:
         (m, l, acc), _ = jax.lax.scan(
             step, (m0, l0, acc0),
@@ -261,3 +268,90 @@ def _insert_at(cache, new, pos):
         return jax.lax.dynamic_update_slice_in_dim(c, n.astype(c.dtype),
                                                    p, axis=0)
     return jax.vmap(one)(cache, new.astype(cache.dtype), pos)
+
+
+# ----------------------------------------------------------- chunk resume
+
+def _insert_span(cache, new, start):
+    """Write ``new`` (B, C, ...) at rows [start[b], start[b]+C) of a
+    linear cache (B, S, ...). Out-of-bounds positions (a pad tail
+    hanging past capacity) are DROPPED, not clamped — clamping would
+    shift the write window backward over real entries."""
+    C = new.shape[1]
+
+    def one(c, n, s):
+        return c.at[s + jnp.arange(C)].set(n.astype(c.dtype), mode="drop",
+                                           unique_indices=True)
+
+    return jax.vmap(one)(cache, new.astype(cache.dtype),
+                         start.astype(jnp.int32))
+
+
+def _ring_update(ring, chunk, start, lengths):
+    """Scatter a prefill chunk into a windowed ring buffer, per row.
+
+    ring (B, cap, ...); chunk (B, C, ...) holds absolute positions
+    start[b] + i, of which only i < lengths[b] are valid. Ring slot j
+    takes the NEWEST valid chunk position p with p % cap == j and keeps
+    its old value otherwise — pad positions never clobber resident
+    entries (they may be needed by later chunks or the next occupant
+    of a shared-prefix snapshot)."""
+    B, cap = ring.shape[:2]
+    C = chunk.shape[1]
+    j = jnp.arange(cap)[None, :]                     # (1, cap)
+    r0 = (j - start[:, None]) % cap                  # smallest i >= 0 -> j
+    li = lengths[:, None].astype(jnp.int32)
+    i_star = r0 + cap * jnp.maximum((li - 1 - r0) // cap, 0)
+    has = (r0 < li) & (i_star < C)                   # (B, cap)
+    idx = jnp.clip(i_star, 0, C - 1)
+    tail = (1,) * (chunk.ndim - 2)
+    picked = jnp.take_along_axis(chunk.astype(ring.dtype),
+                                 idx.reshape((B, cap) + tail), axis=1)
+    return jnp.where(has.reshape((B, cap) + tail), picked, ring)
+
+
+def chunk_attention(cfg, p, x, cache_k, cache_v, qpos, start, lengths):
+    """Resume-prefill attention for a C-token chunk against a live slot
+    cache. x (B, C, d); qpos (B, C) absolute positions start[b]+i;
+    lengths (B,) valid tokens per row (0 = row untouched upstream).
+    Returns (out (B, C, d), new_k, new_v).
+
+    Linear buffers: the chunk KV is scattered first, then queries attend
+    the whole buffer under the causal mask — positions beyond
+    start+lengths are masked by kv_len, so stale entries from a retired
+    occupant are never read. Windowed rings: queries attend
+    [resident ring || chunk KV] BEFORE the ring is rewritten (scattering
+    first would lose ring positions that early chunk queries still
+    need), with each ring slot's absolute occupant position derived from
+    the resume offset; invalid slots are pushed past the newest query so
+    the causal mask removes them.
+    """
+    B, C, d = x.shape
+    H, Hkv, hd = cfg.attn_dims
+    S_buf = cache_k.shape[1]
+    windowed = bool(cfg.sliding_window) and cfg.sliding_window <= S_buf
+    q, k_new, v_new = qkv_project(cfg, p, x, qpos)
+    kv_len = (start + lengths).astype(jnp.int32)     # (B,)
+    if windowed:
+        j = jnp.arange(S_buf)[None, :]
+        occ = j + S_buf * ((start[:, None] - 1 - j) // S_buf)
+        occ = jnp.where(occ < 0, qpos[:, -1:] + 1, occ)   # causal-masked
+        kv_k = jnp.concatenate([cache_k, k_new.astype(cache_k.dtype)], 1)
+        kv_v = jnp.concatenate([cache_v, v_new.astype(cache_v.dtype)], 1)
+        kvp = jnp.concatenate([occ, qpos], axis=1)   # (B, S_buf + C)
+        out = attention_core(q, kv_k, kv_v, q_positions=qpos,
+                             kv_positions=kvp, causal=True,
+                             window=cfg.sliding_window, kv_len=kv_len,
+                             kv_chunk=S_buf + C,
+                             softcap=cfg.attn_logit_softcap)
+        cache_k = _ring_update(cache_k, k_new, start, lengths)
+        cache_v = _ring_update(cache_v, v_new, start, lengths)
+    else:
+        cache_k = _insert_span(cache_k, k_new, start)
+        cache_v = _insert_span(cache_v, v_new, start)
+        out = attention_core(q, cache_k, cache_v, q_positions=qpos,
+                             causal=True, window=0, kv_len=kv_len,
+                             kv_chunk=S_buf,
+                             softcap=cfg.attn_logit_softcap)
+    out = out.reshape(B, C, H * hd) @ p["wo"]
+    return out, cache_k, cache_v

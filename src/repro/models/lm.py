@@ -563,6 +563,176 @@ class LanguageModel:
                 out[name] = big.at[:, slots].set(new.astype(big.dtype))
         return logits, out
 
+    def prefill_chunk_at(self, params, cache, tokens, slots, *, start,
+                         chunk_lengths) -> tuple[jnp.ndarray, Pytree]:
+        """Resume prefill for a C-token chunk directly inside a
+        persistent slot cache (chunked admission / prefix-suffix fill).
+
+        tokens (n, C) right-padded chunk tokens; slots (n,) slot ids,
+        or None meaning "all rows, in order" (the engine's fixed-shape
+        chunk call — skips the row gather/scatter entirely);
+        start (n,) resume positions (tokens[i, 0] is absolute position
+        start[i] of its prompt — 0 for a cold chunk, the prefix length
+        for a suffix resumed off a prefix-store copy, or a prior chunk
+        boundary); chunk_lengths (n,) valid tokens in this chunk, with
+        0 marking an INACTIVE row (its slot state passes through
+        untouched — rows of a chunk group that already finished, or
+        were cancelled, must not be re-written by later group chunks).
+        Everything is traced, so one compile serves every (n, C) shape
+        regardless of the per-row offsets.
+
+        Returns (logits (n, V) of each row's last valid chunk token,
+        updated cache). Pure — jit with the cache donated.
+        """
+        cfg = self.cfg
+        assert cfg.family != "vlm", "vlm has no chunked prefill"
+        start = start.astype(jnp.int32)
+        chunk_lengths = chunk_lengths.astype(jnp.int32)
+        if slots is None:
+            small = cache
+        else:
+            slots = slots.astype(jnp.int32)
+            small = {name: (big[slots] if name == "pos" else big[:, slots])
+                     for name, big in cache.items()}
+        logits, new_small = self._chunk_forward(params, small, tokens,
+                                                start, chunk_lengths)
+        active = chunk_lengths > 0
+        out = {}
+        for name, big in cache.items():
+            new = new_small[name].astype(big.dtype)
+            if name == "pos":                  # (n,) — batch axis 0
+                merged = jnp.where(active, new, small[name])
+                out[name] = (merged if slots is None
+                             else big.at[slots].set(merged))
+            else:                              # (L, n, ...) — batch axis 1
+                act = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+                merged = jnp.where(act, new, small[name])
+                out[name] = (merged if slots is None
+                             else big.at[:, slots].set(merged))
+        return logits, out
+
+    def _chunk_forward(self, params, cache, tokens, start, lengths):
+        """decode_step-shaped layer scan over a (B, C) chunk resumed at
+        per-row absolute positions ``start``. Returns (last-valid
+        logits (B, V), updated small cache with pos = start+lengths)."""
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        B, C, d = x.shape
+        qpos = start[:, None] + jnp.arange(C)[None, :]       # (B, C)
+        shared = params.get("shared")
+        shared_cache = ((cache["attn_k"], cache["attn_v"])
+                        if cfg.family == "hybrid" else None)
+        layer_cache = {k: v for k, v in cache.items()
+                       if k not in ("pos", "attn_k", "attn_v")}
+        # a COLD chunk (start == 0) lands in a freshly reacquired slot
+        # whose recurrent state is the retired occupant's — stale KV is
+        # masked by kv_len, but SSM conv/h carries in and must be zeroed
+        for name in ("conv", "h"):
+            if name in layer_cache:
+                fresh = (start == 0).reshape(
+                    (1, -1) + (1,) * (layer_cache[name].ndim - 2))
+                layer_cache[name] = jnp.where(
+                    fresh, jnp.zeros_like(layer_cache[name]),
+                    layer_cache[name])
+
+        def body(carry, inp):
+            x, shared_cache = carry
+            params_l, cache_l, idx = inp
+            x, new_cache_l, shared_cache = self._layer_chunk(
+                params_l, x, cache_l, qpos, start, lengths, idx, shared,
+                shared_cache)
+            return (x, shared_cache), new_cache_l
+
+        if cfg.scan_layers:
+            (x, shared_cache), new_layer_cache = jax.lax.scan(
+                body, (x, shared_cache),
+                (params["layers"], layer_cache, jnp.arange(cfg.num_layers)))
+        else:
+            carry, outs = (x, shared_cache), []
+            for i in range(cfg.num_layers):
+                sl = jax.tree_util.tree_map(lambda t: t[i],
+                                            (params["layers"], layer_cache))
+                carry, new_cache_l = body(carry, (*sl, jnp.asarray(i)))
+                outs.append(new_cache_l)
+            x, shared_cache = carry
+            new_layer_cache = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *outs)
+
+        new_cache = dict(new_layer_cache)
+        new_cache["pos"] = start + lengths
+        if cfg.family == "hybrid":
+            new_cache["attn_k"], new_cache["attn_v"] = shared_cache
+        # rows with lengths == 0 produce garbage logits the caller masks
+        logits = self._last_valid_logits(params, x,
+                                         jnp.maximum(lengths, 1))
+        return logits, new_cache
+
+    def _layer_chunk(self, params_l, x, cache_l, qpos, start, lengths,
+                     layer_idx, shared, shared_cache):
+        """One layer, one resumed chunk. Mirrors `_layer_decode` with the
+        span/ring chunk attention and lengths-masked SSM recurrence."""
+        cfg = self.cfg
+        if cfg.family in ("ssm", "hybrid"):
+            h = L.apply_norm(cfg, x, params_l["ln1"])
+            fwd = (SSM.mamba1_forward if cfg.family == "ssm"
+                   else SSM.mamba2_forward)
+            # state carry-in + lengths: pad steps are identity for the
+            # recurrence, and lengths == 0 returns the carried state
+            y, st = fwd(cfg, params_l["ssm"], h,
+                        state={"conv": cache_l["conv"], "h": cache_l["h"]},
+                        lengths=lengths)
+            x = x + y
+            new_cache_l = dict(cache_l, conv=st["conv"], h=st["h"])
+            if cfg.family == "hybrid" and cfg.attn_every:
+                k_all, v_all = shared_cache
+                a_idx = layer_idx // cfg.attn_every
+
+                def with_attn(args):
+                    x, k_all, v_all = args
+                    k_l = jax.lax.dynamic_index_in_dim(k_all, a_idx, 0,
+                                                       keepdims=False)
+                    v_l = jax.lax.dynamic_index_in_dim(v_all, a_idx, 0,
+                                                       keepdims=False)
+                    h = L.apply_norm(cfg, x, shared["ln1"])
+                    out, k_l, v_l = A.chunk_attention(
+                        cfg, shared["attn"], h, k_l, v_l, qpos, start,
+                        lengths)
+                    x = x + out
+                    h = L.apply_norm(cfg, x, shared["ln2"])
+                    x = x + mlp_block(cfg, shared["mlp"], h)
+                    k_all = jax.lax.dynamic_update_index_in_dim(
+                        k_all, k_l, a_idx, 0)
+                    v_all = jax.lax.dynamic_update_index_in_dim(
+                        v_all, v_l, a_idx, 0)
+                    return x, k_all, v_all
+
+                x, k_all, v_all = jax.lax.cond(
+                    layer_idx % cfg.attn_every == 0, with_attn,
+                    lambda a: a, (x, k_all, v_all))
+                shared_cache = (k_all, v_all)
+            return x, new_cache_l, shared_cache
+
+        h = L.apply_norm(cfg, x, params_l["ln1"])
+        if cfg.use_mla:
+            out, ckv, krope = MLA.mla_chunk(cfg, params_l["attn"], h,
+                                            cache_l["ckv"],
+                                            cache_l["krope"],
+                                            qpos, start, lengths)
+            new_cache_l = dict(cache_l, ckv=ckv, krope=krope)
+        else:
+            out, k, v = A.chunk_attention(cfg, params_l["attn"], h,
+                                          cache_l["k"], cache_l["v"],
+                                          qpos, start, lengths)
+            new_cache_l = dict(cache_l, k=k, v=v)
+        x = x + out
+        h = L.apply_norm(cfg, x, params_l["ln2"])
+        if cfg.family == "moe":
+            y, _ = moe_block(cfg, params_l["moe"], h)
+            x = x + y
+        else:
+            x = x + mlp_block(cfg, params_l["mlp"], h)
+        return x, new_cache_l, shared_cache
+
     def _prefill_recurrent(self, params, x, positions, cache, lengths=None):
         """SSM/hybrid prefill: full-sequence pass per layer, carrying the
         recurrent state; hybrid shared-attention KV is collected for the

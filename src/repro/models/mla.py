@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
-from repro.models.attention import attention_core, _insert_at
+from repro.models.attention import attention_core, _insert_at, _insert_span
 
 NEG_INF = -1.0e30
 
@@ -124,4 +124,45 @@ def mla_decode(cfg, p, x, cache_ckv, cache_krope, pos):
     v_up = p["v_up"].reshape(r, H, vd)
     out = jnp.einsum("bhr,rhv->bhv", out_lat, v_up.astype(jnp.float32))
     out = out.reshape(B, 1, H * vd).astype(x.dtype) @ p["wo"]
+    return out, cache_ckv, cache_krope
+
+
+def mla_chunk(cfg, p, x, cache_ckv, cache_krope, qpos, start, lengths):
+    """Absorbed resume-prefill for a C-token chunk. x (B,C,d);
+    qpos (B,C) absolute positions start[b]+i; lengths (B,) valid tokens
+    per row. Latents are scattered at [start, start+C) and the chunk
+    attends the whole latent cache under a causal + kv_len mask, so
+    positions past start+lengths (pad, or a prior occupant's leftovers)
+    never contribute. Returns (out (B,C,d), new caches)."""
+    B, C, d = x.shape
+    H = cfg.num_heads
+    nope, rope, vd, r = (cfg.qk_nope_dim, cfg.qk_rope_dim,
+                         cfg.v_head_dim, cfg.kv_lora_rank)
+    S = cache_ckv.shape[1]
+
+    q_nope, q_rope = _queries(cfg, p, x, qpos)              # (B,C,H,*)
+    c_kv, k_rope = _latents(cfg, p, x, qpos)                # (B,C,r),(B,C,1,rope)
+
+    cache_ckv = _insert_span(cache_ckv, c_kv, start)
+    cache_krope = _insert_span(cache_krope, k_rope[:, :, 0, :], start)
+
+    k_up = p["k_up"].reshape(r, H, nope)
+    q_lat = jnp.einsum("bchn,rhn->bchr", q_nope.astype(jnp.float32),
+                       k_up.astype(jnp.float32))
+    scores = jnp.einsum("bchr,bsr->bhcs", q_lat,
+                        cache_ckv.astype(jnp.float32))
+    scores += jnp.einsum("bche,bse->bhcs", q_rope.astype(jnp.float32),
+                         cache_krope.astype(jnp.float32))
+    scores *= (nope + rope) ** -0.5
+    kp = jnp.arange(S)[None, None, None, :]                 # linear cache
+    qp = qpos[:, None, :, None]
+    kv_len = (start + lengths)[:, None, None, None]
+    scores = jnp.where((kp <= qp) & (kp < kv_len), scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)                 # (B,H,C,S)
+
+    out_lat = jnp.einsum("bhcs,bsr->bchr", probs,
+                         cache_ckv.astype(jnp.float32))
+    v_up = p["v_up"].reshape(r, H, vd)
+    out = jnp.einsum("bchr,rhv->bchv", out_lat, v_up.astype(jnp.float32))
+    out = out.reshape(B, C, H * vd).astype(x.dtype) @ p["wo"]
     return out, cache_ckv, cache_krope

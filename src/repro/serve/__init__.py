@@ -5,6 +5,10 @@ request scheduler, in-jit sampling, and the continuous-batching engine
 from repro.serve.cache import SlotCache  # noqa: F401
 from repro.serve.engine import (DecodeEngine, ServeEngine,  # noqa: F401
                                 make_prefill_step, make_serve_step)
+from repro.serve.prefix import PrefixPool, RadixIndex  # noqa: F401
+from repro.serve.report import (ServeScenario, TrafficItem,  # noqa: F401
+                                mixed_length_traffic, run_scenario,
+                                shared_prefix_traffic, write_serve_report)
 from repro.serve.sampling import (SamplerConfig, parse_sampler,  # noqa: F401
                                   sample)
 from repro.serve.scheduler import (FinishedRequest, QueueFull,  # noqa: F401

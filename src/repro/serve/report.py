@@ -1,0 +1,242 @@
+"""Serve-side experiment path: declarative traffic scenarios ->
+per-scenario TTFT/latency percentiles + throughput -> ``BENCH_serve.json``
+(the serve twin of ``experiments/record.py``/``report.py``).
+
+A :class:`ServeScenario` names an engine configuration plus traffic as
+WAVES of requests (the engine drains between waves — wave 2 can hit
+prefix snapshots wave 1 left behind). Within a wave each request carries
+a fractional arrival offset; :func:`run_scenario` replays offsets
+against a wall-clock ``time_scale`` (by default the scenario's own
+warmup wall), so "a short request lands while a long prefill is in
+flight" reproduces across hardware speeds. Warmup runs the full traffic
+once on the same engine to compile every shape out of the measurement
+(and leaves the prefix pool warm — measured numbers are steady-state).
+
+Reported per scenario: request count, useful tok/s, wall, occupancy,
+TTFT/latency percentiles (p50/p90/p99/mean/max), decode trace count
+(the one-traced-call-per-token contract), and prefix-pool hit stats.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+from repro.experiments.record import atomic_write_json
+from repro.serve.engine import ServeEngine
+
+
+@dataclasses.dataclass
+class TrafficItem:
+    """One request: ``at`` is the fractional arrival offset within the
+    wave (0 = wave start, scaled by ``time_scale`` seconds)."""
+
+    tokens: np.ndarray
+    max_new: int
+    at: float = 0.0
+    cls: str = ""        # traffic class for per-class percentiles
+
+
+@dataclasses.dataclass
+class ServeScenario:
+    """Engine configuration + traffic. ``engine`` holds ServeEngine
+    kwargs (slots, capacity, prefill_chunk, prefix_entries, ...)."""
+
+    name: str
+    engine: dict
+    waves: list[list[TrafficItem]]
+
+    def total_requests(self) -> int:
+        return sum(len(w) for w in self.waves)
+
+
+# ------------------------------------------------------------- traffic
+
+def shared_prefix_traffic(vocab: int, *, sessions: int = 3,
+                          per_session: int = 3, prefix_len: int = 160,
+                          suffix_len: int = 8, max_new: int = 8,
+                          seed: int = 0) -> list[list[TrafficItem]]:
+    """Session-style traffic: each session's requests share a long
+    system-prompt prefix and differ in a short suffix. Wave 1 carries
+    one primer per session (cold — its chunk-boundary snapshots seed
+    the prefix store); wave 2 carries the followers."""
+    rng = np.random.default_rng(seed)
+    primers, followers = [], []
+    for s in range(sessions):
+        prefix = rng.integers(1, vocab, size=prefix_len).astype(np.int32)
+        for r in range(per_session):
+            suffix = rng.integers(1, vocab, size=suffix_len).astype(np.int32)
+            item = TrafficItem(np.concatenate([prefix, suffix]), max_new)
+            (primers if r == 0 else followers).append(item)
+    return [primers, followers]
+
+
+def mixed_length_traffic(vocab: int, *, n_long: int = 3, n_short: int = 9,
+                         long_len: int = 192, short_len: int = 8,
+                         long_new: int = 8, short_new: int = 8,
+                         seed: int = 0) -> list[list[TrafficItem]]:
+    """Concurrent-decode TTFT workload: long-prompt requests spread over
+    the first 60% of the (scaled) wave window, short requests arriving
+    densely over the prefill-heavy first half — shorts land while long
+    prefills are in flight, which is exactly what monolithic admission
+    makes them wait for."""
+    rng = np.random.default_rng(seed)
+    wave = []
+    for i in range(n_long):
+        p = rng.integers(1, vocab, size=long_len).astype(np.int32)
+        wave.append(TrafficItem(p, long_new, cls="long",
+                                at=0.6 * i / max(1, n_long)))
+    for i in range(n_short):
+        p = rng.integers(1, vocab, size=short_len).astype(np.int32)
+        wave.append(TrafficItem(p, short_new, cls="short",
+                                at=0.5 * i / n_short))
+    return [sorted(wave, key=lambda t: t.at)]
+
+
+# -------------------------------------------------------------- runner
+
+def _drive_wave(engine: ServeEngine, wave: Sequence[TrafficItem],
+                time_scale: float, classes: Optional[dict] = None) -> list:
+    """Submit the wave's items at their scaled arrival offsets while
+    stepping the engine; drain before returning. ``classes`` collects
+    rid -> traffic class for per-class percentiles."""
+    finished = []
+    items = sorted(wave, key=lambda t: t.at)
+    i, t0 = 0, time.perf_counter()
+    while i < len(items) or engine.scheduler.has_work():
+        now = time.perf_counter() - t0
+        while i < len(items) and items[i].at * time_scale <= now:
+            rid = engine.submit(items[i].tokens, items[i].max_new)
+            if classes is not None and items[i].cls:
+                classes[rid] = items[i].cls
+            i += 1
+        if not engine.scheduler.has_work():
+            nxt = items[i].at * time_scale - now
+            if nxt > 0:
+                time.sleep(nxt)
+            continue
+        finished.extend(engine.step())
+    return finished
+
+
+def _pct(vals: list) -> dict:
+    if not vals:
+        return {}
+    a = np.asarray(vals, np.float64)
+    return {"p50": round(float(np.percentile(a, 50)), 5),
+            "p90": round(float(np.percentile(a, 90)), 5),
+            "p99": round(float(np.percentile(a, 99)), 5),
+            "mean": round(float(a.mean()), 5),
+            "max": round(float(a.max()), 5)}
+
+
+def summarize(finished: list, wall: float, engine: ServeEngine,
+              classes: Optional[dict] = None) -> dict:
+    tokens = int(sum(f.tokens.size for f in finished))
+    out = {
+        "requests": len(finished),
+        "tokens": tokens,
+        "wall_s": round(wall, 4),
+        "tok_per_s": round(tokens / wall, 2) if wall > 0 else 0.0,
+        "occupancy": round(engine.occupancy, 4),
+        "ttft": _pct([f.ttft for f in finished]),
+        "latency": _pct([f.latency for f in finished]),
+        "decode_traces": engine.traces["decode"],
+        "chunk_calls": engine.stats["chunk_calls"],
+    }
+    if classes:
+        by_class = {}
+        for cls in sorted(set(classes.values())):
+            fs = [f for f in finished if classes.get(f.request.rid) == cls]
+            by_class[cls] = {"requests": len(fs),
+                             "ttft": _pct([f.ttft for f in fs]),
+                             "latency": _pct([f.latency for f in fs])}
+        out["by_class"] = by_class
+    if engine.pool is not None:
+        out["prefix"] = dict(engine.pool.stats,
+                             hit_rate=round(engine.pool.hit_rate, 4))
+    return out
+
+
+def run_scenario(model, params, scenario: ServeScenario, *,
+                 warmup: bool = True,
+                 time_scale: Optional[float] = None) -> dict:
+    """Execute a scenario; returns its summary row. ``time_scale``
+    (seconds) stretches fractional arrival offsets — pass the SAME
+    value to two scenarios to compare them under identical traffic
+    timing; None uses the scenario's own warmup wall (or 0 when warmup
+    is off: all arrivals immediate)."""
+    engine = ServeEngine(model, params, **scenario.engine)
+    warm_wall = 0.0
+    staggered = any(t.at > 0 for w in scenario.waves for t in w)
+    if warmup:
+        t0 = time.perf_counter()
+        for wave in scenario.waves:
+            _drive_wave(engine, wave, 0.0)
+        warm_wall = time.perf_counter() - t0
+        if staggered:
+            # calibration pass: compile-free busy wall, so arrivals in
+            # the measured run land inside the busy window rather than
+            # spreading over a compile-inflated one
+            t0 = time.perf_counter()
+            for wave in scenario.waves:
+                _drive_wave(engine, wave, 0.0)
+            warm_wall = time.perf_counter() - t0
+            # replay the staggered schedule so admission group shapes
+            # seen under timed arrivals (e.g. singleton groups) are
+            # compiled out of the measurement too
+            scale = time_scale if time_scale is not None else warm_wall
+            for wave in scenario.waves:
+                _drive_wave(engine, wave, scale)
+        engine.reset_stats()
+    scale = time_scale if time_scale is not None else warm_wall
+    finished, classes = [], {}
+    t0 = time.perf_counter()
+    for wave in scenario.waves:
+        finished.extend(_drive_wave(engine, wave, scale, classes))
+    wall = time.perf_counter() - t0
+    row = summarize(finished, wall, engine, classes)
+    row["warmup_wall_s"] = round(warm_wall, 4)
+    row["time_scale_s"] = round(scale, 4)
+    row["engine"] = {k: v for k, v in scenario.engine.items()
+                     if isinstance(v, (int, float, str, bool, type(None)))}
+    return row
+
+
+# -------------------------------------------------------------- report
+
+def write_serve_report(path: str, payload: dict) -> dict:
+    """Write ``payload`` under the ``serve`` key of ``path``, keeping
+    any other top-level keys already in the file."""
+    import json
+    import os
+    existing = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+        except (OSError, ValueError):
+            existing = {}
+    existing["serve"] = payload
+    atomic_write_json(path, existing)
+    return existing
+
+
+def format_scenarios(scenarios: dict) -> str:
+    """Human-readable scenario table for CLI output."""
+    lines = [f"{'scenario':>14s} {'req':>4s} {'tok/s':>8s} {'occ':>6s} "
+             f"{'ttft p50':>9s} {'ttft p99':>9s} {'lat p99':>9s} "
+             f"{'hit rate':>9s}"]
+    for name, r in scenarios.items():
+        hit = r.get("prefix", {}).get("hit_rate")
+        lines.append(
+            f"{name:>14s} {r['requests']:4d} {r['tok_per_s']:8.1f} "
+            f"{r['occupancy']:6.2f} "
+            f"{r['ttft'].get('p50', 0.0):9.4f} "
+            f"{r['ttft'].get('p99', 0.0):9.4f} "
+            f"{r['latency'].get('p99', 0.0):9.4f} "
+            f"{hit if hit is not None else '-':>9}")
+    return "\n".join(lines)

@@ -112,14 +112,21 @@ class RequestScheduler:
 
     # -------------------------------------------------------- admission
 
-    def pop_admissions(self) -> dict[int, list[tuple[int, Request, float]]]:
+    def pop_admissions(self, limit: Optional[int] = None
+                       ) -> dict[int, list[tuple[int, Request, float]]]:
         """Drain queued requests into free slots.
 
         Returns {padded_len: [(slot, request, submit_time), ...]} — one
         ``prefill_at`` call per group (same prompt-buffer shape).
+        ``limit`` caps admissions this call: group batch shapes then
+        stay small and stable (at most ``limit`` rows), bounding prefill
+        recompilation under bursty arrivals.
         """
         groups: dict[int, list[tuple[int, Request, float]]] = {}
-        while self.queue and self.cache.free_slots:
+        admitted = 0
+        while (self.queue and self.cache.free_slots
+               and (limit is None or admitted < limit)):
+            admitted += 1
             req, t0 = self.queue.popleft()
             slot = self.cache.acquire()
             assert slot is not None
@@ -148,6 +155,23 @@ class RequestScheduler:
             request=req, tokens=np.asarray(st.emitted, np.int32),
             submit_time=st.submit_time, finish_time=now,
             first_token_time=st.first_token_time)
+
+    # ----------------------------------------------------------- cancel
+
+    def cancel(self, rid: int) -> tuple[Optional[str], Optional[int]]:
+        """Abort a request by rid. Returns ("queued", None) if it was
+        still waiting, ("active", slot) if its slot was retired (the
+        slot is released here), or (None, None) if unknown."""
+        for i, (req, _t0) in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[i]
+                return "queued", None
+        for slot, st in self.active.items():
+            if st.request.rid == rid:
+                del self.active[slot]
+                self.cache.release(slot)
+                return "active", slot
+        return None, None
 
     # ------------------------------------------------------------ state
 

@@ -1,0 +1,335 @@
+"""Prefix-sharing + chunked-prefill tests: radix-index and refcounted
+pool semantics, chunked prefill exactness vs monolithic (model layer and
+engine layer, incl. a prompt longer than a sliding-window KV ring),
+prefix-store reuse producing byte-identical tokens to cold prefill,
+multi-turn retirement-snapshot hits, the one-traced-decode-call
+contract on the chunked path, and mid-flight cancellation of a request
+whose prefix entry is shared with a live survivor.
+
+Fast single-family subset runs in tier-1; the full four-family sweeps
+carry the ``tier2`` (nightly) mark.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import ServeEngine
+from repro.serve.prefix import PrefixPool, RadixIndex
+
+ALL_ARCHS = ["qwen3-14b", "deepseek-v2-236b", "falcon-mamba-7b",
+             "zamba2-7b"]   # dense GQA / MLA / SSM / hybrid
+# tier-1 covers one family per mechanism; the rest are nightly
+FAMS = [a if a == "qwen3-14b" else
+        pytest.param(a, marks=pytest.mark.tier2) for a in ALL_ARCHS]
+
+_MODELS = {}
+
+
+def _model(arch):
+    if arch not in _MODELS:
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(1))
+        _MODELS[arch] = (cfg, model, params)
+    return _MODELS[arch]
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, (l,)).astype(np.int32)
+            for l in lens]
+
+
+def _same(a_list, b_list):
+    for a, b in zip(a_list, b_list):
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------ radix index
+
+def test_radix_insert_longest_and_edge_split():
+    ix = RadixIndex()
+    ix.insert((1, 2, 3, 4), 0)
+    ix.insert((1, 2, 5), 1)          # splits the (1,2,3,4) edge at 2
+    ix.insert((1, 2), 2)             # lands exactly on the split node
+    assert ix.longest((1, 2, 3, 4, 9)) == (0, 4)
+    assert ix.longest((1, 2, 5, 7)) == (1, 3)
+    assert ix.longest((1, 2, 9)) == (2, 2)   # falls back to shorter hit
+    assert ix.longest((9, 9)) is None
+    assert ix.get((1, 2)) == 2
+    assert ix.get((1, 2, 3)) is None  # mid-edge: not a stored prefix
+    assert len(ix) == 3
+
+
+def test_radix_remove_prunes_and_merges():
+    ix = RadixIndex()
+    ix.insert((1, 2, 3, 4), 0)
+    ix.insert((1, 2, 3, 4, 5, 6), 1)
+    ix.remove(0)                     # pass-through node merges back
+    assert len(ix) == 1
+    assert ix.get((1, 2, 3, 4)) is None
+    assert ix.longest((1, 2, 3, 4, 5, 6, 7)) == (1, 6)
+    ix.remove(1)
+    assert len(ix) == 0
+    assert ix.longest((1, 2, 3, 4, 5, 6)) is None
+    assert not ix.root.children      # fully pruned
+
+
+def test_radix_error_paths():
+    ix = RadixIndex()
+    with pytest.raises(ValueError, match="empty"):
+        ix.insert((), 0)
+    ix.insert((1, 2), 0)
+    with pytest.raises(ValueError, match="already indexed"):
+        ix.insert((3, 4), 0)         # entry id reuse
+    with pytest.raises(ValueError, match="already held"):
+        ix.insert((1, 2), 1)         # prefix reuse
+
+
+# ------------------------------------------------------------ prefix pool
+
+def test_pool_refcount_pins_entry_against_eviction():
+    pool = PrefixPool(1, min_tokens=2)
+    e = pool.insert((1, 2, 3))
+    assert e is not None
+    hit = pool.acquire((1, 2, 3, 9))
+    assert hit == (e, 3)
+    # the only entry is pinned: insert must skip, not evict
+    assert pool.insert((7, 8)) is None
+    pool.release(e)
+    assert pool.insert((7, 8)) is not None   # now evictable
+    assert pool.stats["evictions"] == 1
+    with pytest.raises(ValueError, match="below zero"):
+        pool.release(e)
+
+
+def test_pool_lru_eviction_order():
+    pool = PrefixPool(2, min_tokens=1)
+    e0 = pool.insert((1, 1))
+    e1 = pool.insert((2, 2))
+    m = pool.acquire((1, 1, 5))      # touches e0 -> e1 becomes LRU
+    pool.release(m[0])
+    pool.insert((3, 3))
+    assert pool.has((1, 1)) and pool.has((3, 3))
+    assert not pool.has((2, 2))      # e1 was evicted
+    assert e0 != e1
+
+
+def test_pool_min_tokens_and_dedup():
+    pool = PrefixPool(4, min_tokens=3)
+    assert pool.insert((1, 2)) is None        # too short to store
+    e = pool.insert((1, 2, 3))
+    assert pool.insert((1, 2, 3)) is None     # duplicate key: no-op
+    assert pool.acquire((1, 2, 9)) is None    # match below min_tokens
+    assert pool.stats["misses"] == 1
+    hit = pool.acquire((1, 2, 3, 4))
+    assert hit == (e, 3)
+    assert pool.stats["hits"] == 1 and pool.stats["hit_tokens"] == 3
+    assert pool.hit_rate == 0.5
+
+
+# ------------------------------------- chunked prefill: model layer exact
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_chunked_prefill_matches_monolithic(arch):
+    """prefill_chunk_at resumed in small chunks reproduces prefill_at:
+    same final-position logits and the same greedy decode trajectory."""
+    cfg, model, params = _model(arch)
+    lens, cap, C = (7, 5), 32, 3
+    rng = np.random.default_rng(0)
+    B, S = len(lens), max(lens)
+    toks = np.zeros((B, S), np.int32)
+    for i, l in enumerate(lens):
+        toks[i, :l] = rng.integers(1, cfg.vocab_size, size=l)
+    toks, lengths = jnp.asarray(toks), jnp.asarray(lens, jnp.int32)
+
+    cache_ref = model.init_cache(B, cap)
+    logits_ref, cache_ref = model.prefill_at(
+        params, cache_ref, toks, jnp.arange(B), lengths=lengths)
+
+    cache = model.init_cache(B, cap)
+    start, logits = np.zeros(B, np.int32), None
+    while (start < np.asarray(lens)).any():
+        cl = np.clip(np.asarray(lens) - start, 0, C).astype(np.int32)
+        chunk = np.zeros((B, C), np.int32)
+        for i in range(B):
+            chunk[i, :cl[i]] = np.asarray(toks)[i, start[i]:start[i] + cl[i]]
+        lg, cache = model.prefill_chunk_at(
+            params, cache, jnp.asarray(chunk), jnp.arange(B),
+            start=jnp.asarray(start), chunk_lengths=jnp.asarray(cl))
+        done = (cl > 0) & (start + cl == np.asarray(lens))
+        lg = np.asarray(lg)
+        logits = lg if logits is None else np.where(done[:, None], lg, logits)
+        start = start + cl
+
+    nxt_ref = np.asarray(logits_ref).argmax(-1)[:, None].astype(np.int32)
+    nxt = logits.argmax(-1)[:, None].astype(np.int32)
+    np.testing.assert_array_equal(nxt_ref, nxt)
+    for _ in range(5):               # caches must agree, not just logits
+        lr, cache_ref = model.decode_step(params, cache_ref,
+                                          jnp.asarray(nxt_ref))
+        lc, cache = model.decode_step(params, cache, jnp.asarray(nxt))
+        nxt_ref = np.asarray(lr)[:, 0].argmax(-1)[:, None].astype(np.int32)
+        nxt = np.asarray(lc)[:, 0].argmax(-1)[:, None].astype(np.int32)
+        np.testing.assert_array_equal(nxt_ref, nxt)
+
+
+# ----------------------------------------- engine layer: chunked + prefix
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_engine_chunked_matches_unchunked(arch):
+    """prefill_chunk=4 admission emits exactly the tokens the monolithic
+    admission path emits (slot reuse: more requests than slots)."""
+    cfg, model, params = _model(arch)
+    ps = _prompts(cfg, [7, 12, 5, 9], seed=2)
+    ref = ServeEngine(model, params, cfg, slots=3, capacity=64,
+                      seed=7).generate(ps, 6)
+    eng = ServeEngine(model, params, cfg, slots=3, capacity=64, seed=7,
+                      prefill_chunk=4)
+    _same(ref, eng.generate(ps, 6))
+    assert eng.stats["chunk_calls"] > 0
+    assert eng.traces["decode"] == 1     # chunking kept the contract
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_engine_prefix_reuse_byte_identical(arch):
+    """Requests sharing a long prefix decode byte-identically to cold
+    full prefill — wave 2 hits the snapshots wave 1 left behind."""
+    cfg, model, params = _model(arch)
+    shared = _prompts(cfg, [16], seed=3)[0]
+    sess = [np.concatenate([shared, p])
+            for p in _prompts(cfg, [4, 6, 5], seed=5)]
+    cold = ServeEngine(model, params, cfg, slots=3, capacity=64,
+                       seed=7).generate(sess, 6)
+    eng = ServeEngine(model, params, cfg, slots=3, capacity=64, seed=7,
+                      prefill_chunk=4, prefix_entries=16,
+                      prefix_min_tokens=4)
+    _same(cold, eng.generate(sess, 6))           # wave 1: cold store
+    _same(cold, eng.generate(sess, 6))           # wave 2: prefix hits
+    assert eng.stats["prefix_hits"] >= 3
+    assert eng.stats["prefix_hit_tokens"] >= 3 * 16
+    assert eng.traces["decode"] == 1
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_engine_multi_turn_hits_retirement_snapshot(arch):
+    """Prefix-only mode (no chunk knob): a turn-2 prompt that extends
+    turn 1's prompt + emitted tokens hits the retirement snapshot and
+    stays exact."""
+    cfg, model, params = _model(arch)
+    shared = _prompts(cfg, [16], seed=3)[0]
+    sess = [np.concatenate([shared, p])
+            for p in _prompts(cfg, [4, 6, 5], seed=5)]
+    turn1 = ServeEngine(model, params, cfg, slots=3, capacity=64,
+                        seed=7).generate(sess, 6)
+    turn2 = [np.concatenate([s, o, e]) for s, o, e in
+             zip(sess, turn1, _prompts(cfg, [3, 4, 5], seed=9))]
+    ref2 = ServeEngine(model, params, cfg, slots=3, capacity=64,
+                       seed=7).generate(turn2, 6)
+    eng = ServeEngine(model, params, cfg, slots=3, capacity=64, seed=7,
+                      prefix_entries=16, prefix_min_tokens=4)
+    _same(turn1, eng.generate(sess, 6))
+    _same(ref2, eng.generate(turn2, 6))
+    assert eng.stats["prefix_hits"] >= 3
+
+
+def test_windowed_ring_chunked_prompt_longer_than_window():
+    """Chunked admission on a sliding-window arch whose prompt exceeds
+    the KV ring: the ring keeps each row's newest window and greedy
+    output matches the monolithic path."""
+    cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                              sliding_window=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(2))
+    ps = _prompts(cfg, [20, 13], seed=14)        # 20 > ring of 8
+    ref = ServeEngine(model, params, cfg, slots=2, capacity=64,
+                      seed=7).generate(ps, 5)
+    eng = ServeEngine(model, params, cfg, slots=2, capacity=64, seed=7,
+                      prefill_chunk=6)
+    _same(ref, eng.generate(ps, 5))
+
+
+# --------------------------------------------------- mid-flight robustness
+
+def test_cancel_request_sharing_pinned_prefix():
+    """Kill a request whose prefix entry is shared with (and pinned by)
+    another live request: the survivor's tokens stay byte-identical,
+    the hold is released, and the entry survives for later hits."""
+    cfg, model, params = _model("qwen3-14b")
+    shared = _prompts(cfg, [16], seed=3)[0]
+    a = np.concatenate([shared, _prompts(cfg, [5], seed=4)[0]])
+    b = np.concatenate([shared, _prompts(cfg, [6], seed=6)[0]])
+    ref_b = ServeEngine(model, params, cfg, slots=2, capacity=64,
+                        seed=7).generate([b], 6)[0]
+
+    eng = ServeEngine(model, params, cfg, slots=2, capacity=64, seed=7,
+                      prefill_chunk=4, prefix_entries=8,
+                      prefix_min_tokens=4)
+    eng.generate([shared], 2)        # primer seeds the store
+    rid_a = eng.submit(a, 6)
+    rid_b = eng.submit(b, 6)
+    eng.step()                       # both mid-prefill, entries pinned
+    held = [r.hold for r in eng._pending if r.hold is not None]
+    assert held                      # at least one pinned hit
+    assert all(eng.pool.meta[h].refs >= 1 for h in held)
+    assert eng.cancel(rid_a)         # kill A mid-prefill
+    finished = eng.run([])
+    by_rid = {f.request.rid: f.tokens for f in finished}
+    assert rid_a not in by_rid       # A never completes
+    np.testing.assert_array_equal(by_rid[rid_b], ref_b)
+    assert all(m.refs == 0 for m in eng.pool.meta.values())  # no leaks
+    assert eng.cancel(999) is False  # unknown rid: no-op
+
+    # the shared entry survived the cancel: a fresh request still hits
+    hits_before = eng.stats["prefix_hits"]
+    c = np.concatenate([shared, _prompts(cfg, [4], seed=8)[0]])
+    ref_c = ServeEngine(model, params, cfg, slots=2, capacity=64,
+                        seed=7).generate([c], 6)[0]
+    np.testing.assert_array_equal(eng.generate([c], 6)[0], ref_c)
+    assert eng.stats["prefix_hits"] > hits_before
+
+
+def test_cancel_mid_decode_survivor_unaffected():
+    """Cancelling a decoding request frees its slot without disturbing a
+    concurrent slot's token stream."""
+    cfg, model, params = _model("qwen3-14b")
+    ps = _prompts(cfg, [6, 9], seed=11)
+    ref = ServeEngine(model, params, cfg, slots=2, capacity=64,
+                      seed=7).generate(ps, 8)
+    eng = ServeEngine(model, params, cfg, slots=2, capacity=64, seed=7,
+                      prefill_chunk=4)
+    rid0 = eng.submit(ps[0], 8)
+    rid1 = eng.submit(ps[1], 8)
+    for _ in range(4):               # prefill done, a few decode steps
+        eng.step()
+    assert eng.cancel(rid0)
+    finished = eng.run([])
+    by_rid = {f.request.rid: f.tokens for f in finished}
+    assert rid0 not in by_rid
+    np.testing.assert_array_equal(by_rid[rid1], ref[1])
+    assert eng.cache.free_slots == 2
+
+
+# ----------------------------------------------------- admission limiting
+
+def test_admit_limit_caps_admissions_per_tick():
+    cfg, model, params = _model("qwen3-14b")
+    eng = ServeEngine(model, params, cfg, slots=4, capacity=64, seed=7,
+                      admit_limit=1)
+    ps = _prompts(cfg, [5, 5, 5, 5], seed=12)
+    ref = ServeEngine(model, params, cfg, slots=4, capacity=64,
+                      seed=7).generate(ps, 4)
+    for p in ps:
+        eng.submit(p, 4)
+    eng.step()
+    assert len(eng.scheduler.active) == 1    # one admission, not four
+    out = eng.run([])
+    by_rid = {f.request.rid: f.tokens for f in sorted(
+        out, key=lambda f: f.request.rid)}
+    _same(ref, list(by_rid.values()))
