@@ -16,6 +16,12 @@ Each row reports wall-clock ms/step AND the traced ``pallas_call``
 launch count (0 for pure-jnp paths) so the launch-count-vs-pytree-size
 story is measurable, not anecdotal.
 
+With >= 2 devices (nightly forces 8 host devices) a ``zero_sharding``
+section additionally pins the ZeRO contract: per-device slot bytes
+under ``TrainPipeline(zero=True)`` must be an ndev-way split of the
+replicated footprint for every optimizer x slot dtype, and the sharded
+step must stay within 1.2x of the replicated mesh step on CPU.
+
 Usage: PYTHONPATH=src python -m benchmarks.optimizer_bench [--quick]
        [--out BENCH_optimizer.json]
 """
@@ -23,6 +29,7 @@ Usage: PYTHONPATH=src python -m benchmarks.optimizer_bench [--quick]
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 from typing import Optional
@@ -283,6 +290,139 @@ def bench_fused_epilogue(params, stacked, *, iters: int, reps: int = 9
     return out
 
 
+# ------------------------------------------------------- ZeRO sharding
+
+# per-device slot bytes under ZeRO must be an ndev-way split of the
+# replicated footprint, with 10% headroom for the row padding that
+# makes the superbuffer divide evenly (pad <= shards * block_rows rows)
+ZERO_SLOT_BYTES_MAX_RATIO = 1.1
+# CPU-proxy step-time bar: the reduce-scatter + all-gather pair may not
+# cost more than 20% over the replicated mesh step at bench scale
+ZERO_STEP_TIME_MAX_RATIO = 1.2
+
+
+def _per_device_slot_nbytes(state) -> int:
+    """Bytes of the rule's own slots ON ONE DEVICE (the placed arrays'
+    shard shapes — 1/ndev of the global bytes for row-sharded ZeRO
+    slots, the full bytes for replicated ones)."""
+    skip = {packing.MASTER_SLOT, packing.WEIGHT_SLOT}
+    total = 0
+    for k, v in state.slots.items():
+        if k in skip:
+            continue
+        for x in jax.tree_util.tree_leaves(v):
+            shard = x.sharding.shard_shape(x.shape)
+            n = 1
+            for s in shard:
+                n *= s
+            total += n * x.dtype.itemsize
+    return total
+
+
+def bench_zero_sharding(params, stacked, batch_n: int, *, iters: int,
+                        reps: int = 9) -> Optional[dict]:
+    """ZeRO-sharded vs replicated optimizer state on an (ndev, 1)
+    data-parallel mesh (nightly forces 8 host devices): asserts the
+    per-device slot bytes are an ndev-way split (x1.1 pad headroom) for
+    every optimizer x slot dtype on the bench-scale tree, records the
+    lenet compiled-peak comparison, and pins the step-time ratio on the
+    CPU proxy."""
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.train import TrainPipeline
+
+    ndev = len(jax.devices())
+    if ndev < 2:
+        print("zero_sharding: skipped (needs >= 2 devices; run under "
+              "--xla_force_host_platform_device_count=8)", flush=True)
+        return None
+    mesh = jax.make_mesh((ndev, 1), ("data", "model"))
+    out: dict = {"ndev": ndev, "mesh": f"{ndev}x1",
+                 "slot_bytes_per_device": {}}
+
+    # Slot memory on the bench tree (the pad headroom is meaningful at
+    # this scale; a toy model's fixed <= shards*block_rows pad rows
+    # would dominate it). Every slot buffer is placed with the ZeRO row
+    # spec — device_put itself verifies the rows really divide.
+    row_sharded = NamedSharding(mesh, PartitionSpec("data", None))
+    bound = ZERO_SLOT_BYTES_MAX_RATIO / ndev
+    for name, make in _OPT_FACTORIES.items():
+        for dt in ("f32", "int8"):
+            rep = make(dt).init(params, stacked=stacked)
+            zero = make(dt).init(params, stacked=stacked,
+                                 zero_shards=ndev)
+            placed = jax.tree_util.tree_map(
+                lambda x: jax.device_put(x, row_sharded), zero.slots)
+            nbytes = {"replicated": _slot_nbytes(rep),
+                      "zero": _per_device_slot_nbytes(
+                          dataclasses.replace(zero, slots=placed))}
+            ratio = nbytes["zero"] / nbytes["replicated"]
+            assert ratio <= bound, (
+                f"zero_sharding {name}/{dt}: per-device slot bytes are "
+                f"{ratio:.4f}x the replicated footprint (limit "
+                f"{bound:.4f} = {ZERO_SLOT_BYTES_MAX_RATIO}/{ndev}) — "
+                f"the ZeRO row shard is not an ndev-way split")
+            out["slot_bytes_per_device"][f"{name}/{dt}"] = {
+                "replicated_bytes": nbytes["replicated"],
+                "zero_bytes": nbytes["zero"],
+                "ratio": round(ratio, 5)}
+            print(f"zero {name:6s} {dt:4s} per-device slots "
+                  f"{nbytes['replicated']:>11,} -> {nbytes['zero']:>10,} "
+                  f"B ({ratio:.4f}x, bound {bound:.4f})", flush=True)
+
+    cfg = get_config("lenet-mnist")
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    batch = {"x": jnp.asarray(rng.random((batch_n, 28, 28, 1)),
+                              jnp.float32),
+             "y": jnp.asarray(rng.integers(0, 10, batch_n), jnp.int32)}
+
+    # compiled peaks + step time, replicated vs ZeRO (lars, f32)
+    peaks, steppers = {}, {}
+    for z in (False, True):
+        pipe = TrainPipeline(model, _OPT_FACTORIES["lars"]("f32"), cfg,
+                             mesh=mesh, zero=z, donate=False)
+        peaks["zero" if z else "replicated"] = \
+            pipe.compiled_peak_bytes(batch)
+        state = pipe.init_state(jax.random.key(0))
+        state, _ = pipe(state, batch)  # compile + warm
+
+        def chunk(n, pipe=pipe, box=[state]):
+            t0 = time.perf_counter()
+            for _ in range(n):
+                box[0], _ = pipe(box[0], batch)
+            jax.block_until_ready(box[0].params)
+            return (time.perf_counter() - t0) / n
+        steppers["zero" if z else "replicated"] = chunk
+    times: dict[str, list[float]] = {k: [] for k in steppers}
+    for _ in range(reps):
+        for key, chunk in steppers.items():
+            times[key].append(chunk(iters))
+    pair = sorted(z / r for z, r in zip(times["zero"],
+                                        times["replicated"]))
+    out["compiled_peak_bytes"] = peaks
+    out["step_time"] = {
+        "optimizer": "lars", "batch": batch_n,
+        "replicated_ms_per_step": min(times["replicated"]) * 1e3,
+        "zero_ms_per_step": min(times["zero"]) * 1e3,
+        "zero_vs_replicated_min_pair": pair[0],
+        "zero_vs_replicated_median_pair": pair[len(pair) // 2]}
+    print(f"zero step time: replicated "
+          f"{out['step_time']['replicated_ms_per_step']:.2f} ms, zero "
+          f"{out['step_time']['zero_ms_per_step']:.2f} ms "
+          f"(min-pair {pair[0]:.2f}x)", flush=True)
+    if jax.default_backend() == "cpu":
+        assert pair[0] <= ZERO_STEP_TIME_MAX_RATIO, (
+            f"ZeRO step is {pair[0]:.2f}x the replicated mesh step even "
+            f"in its cleanest load-paired sample (limit "
+            f"{ZERO_STEP_TIME_MAX_RATIO}x) — the reduce-scatter/"
+            f"all-gather pair regressed")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -384,6 +524,12 @@ def main() -> None:
                                                iters=iters),
     }
 
+    # ZeRO-sharded optimizer states: per-device memory split + step-time
+    # pin on an (ndev, 1) mesh (None on single-device runs)
+    zero_sharding = bench_zero_sharding(params, STACKED,
+                                        32 if args.quick else 64,
+                                        iters=iters)
+
     if args.out:
         payload = {
             "bench": "optimizer",
@@ -393,6 +539,7 @@ def main() -> None:
             "results": records,
             "packed_vs_leaf_ratio": ratios,
             "quantized_states": quantized,
+            "zero_sharding": zero_sharding,
         }
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2)

@@ -11,6 +11,16 @@ counter — so large-batch runs are resumable mid-schedule. The packed
 ``layout`` is pytree *metadata*, not a leaf: it is reconstructed by the
 caller's freshly-initialized template state, and the restore validates
 the stored buffers against the template's shapes.
+
+ZeRO layouts stay LAYOUT-INDEPENDENT on disk: a ZeRO-sharded layout
+pads superbuffer rows to a multiple of ``shards * block_rows``, so the
+save strips the all-zero pad rows (and the matching tail of the int8
+scale columns) down to the canonical ``shards=1`` shape — ``np.asarray``
+on the fully-addressable sharded arrays gathers the shards — and the
+restore re-pads to whatever the template's layout requires (zeros for
+codes / f32 rows, unit scales for pad blocks — exactly the live
+values, so resuming under a DIFFERENT device count stays
+byte-identical).
 """
 
 from __future__ import annotations
@@ -67,8 +77,65 @@ def restore_checkpoint(path: str, target: Pytree) -> Pytree:
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
 
+def _packed_layout(state: Any):
+    return getattr(getattr(state, "opt_state", None), "layout", None)
+
+
+def _map_slots(state: Any, fn) -> Any:
+    """Apply ``fn`` to every optimizer-slot leaf of a TrainState."""
+    import dataclasses
+    opt = state.opt_state
+    slots = {k: jax.tree_util.tree_map(fn, v) for k, v in opt.slots.items()}
+    return state._replace(opt_state=dataclasses.replace(opt, slots=slots))
+
+
+def _strip_zero_padding(state: Any, layout) -> Any:
+    """Crop ZeRO pad rows / pad scale blocks to the shards=1 shapes.
+    ``np.asarray`` gathers each (possibly row-sharded) buffer first."""
+    base_rows = layout.base_rows
+    base_blocks = base_rows // layout.block_rows
+
+    def crop(leaf):
+        a = np.asarray(leaf)
+        if a.ndim == 2 and a.shape == (layout.total_rows, layout.lane):
+            return a[:base_rows]
+        if a.ndim == 2 and a.shape == (layout.num_blocks, 1):
+            return a[:base_blocks]
+        return leaf
+
+    return _map_slots(state, crop)
+
+
+def _repad_zero_padding(state: Any, layout) -> Any:
+    """Inverse of :func:`_strip_zero_padding` for the template's layout:
+    zeros for superbuffer rows / int8 codes, UNIT scales for pad blocks
+    (a zero block's absmax guard yields scale 1.0 — byte-identical to
+    the live quantized state, so cross-device-count resume is exact)."""
+    base_rows = layout.base_rows
+    base_blocks = base_rows // layout.block_rows
+    pad_blocks = layout.num_blocks - base_blocks
+
+    def pad(leaf):
+        a = np.asarray(leaf)
+        if a.ndim == 2 and a.shape == (base_rows, layout.lane):
+            return np.concatenate(
+                [a, np.zeros((layout.pad_rows, layout.lane), a.dtype)])
+        if a.ndim == 2 and a.shape == (base_blocks, 1):
+            return np.concatenate(
+                [a, np.ones((pad_blocks, 1), a.dtype)])
+        return leaf
+
+    return _map_slots(state, pad)
+
+
 def save_train_state(path: str, state: Any) -> None:
-    """Persist a full TrainState (params + opt slots + step) to npz."""
+    """Persist a full TrainState (params + opt slots + step) to npz.
+
+    ZeRO pad rows are stripped first, so snapshots are layout-
+    independent: the same bytes restore under any shard count."""
+    layout = _packed_layout(state)
+    if layout is not None and getattr(layout, "pad_rows", 0):
+        state = _strip_zero_padding(state, layout)
     save_checkpoint(path, state)
 
 
@@ -84,7 +151,21 @@ def restore_train_state(path: str, template: Any) -> Any:
     template has no slot for (e.g. a bf16-policy checkpoint's f32
     master weights restored into an f32-policy state, which would
     otherwise silently drop the master and change the trajectory).
+
+    A ZeRO-padded template (``layout.pad_rows > 0``) is validated and
+    restored against the stored PAD-FREE shapes, then re-padded to the
+    template's own layout — snapshots restore under any shard count.
     """
+    layout = _packed_layout(template)
+    if layout is not None and getattr(layout, "pad_rows", 0):
+        cropped = _strip_zero_padding(template, layout)
+        return _repad_zero_padding(
+            _restore_exact(path, cropped), layout)
+    return _restore_exact(path, template)
+
+
+def _restore_exact(path: str, template: Any) -> Any:
+    """Shape-strict restore against the template as-is (no re-padding)."""
     with np.load(path if path.endswith(".npz") else path + ".npz") as data:
         stored_keys = set(data.files)
     template_keys = {path_str(p) for p, _ in

@@ -324,6 +324,12 @@ def _packed_update(rule: LayerwiseRule, layout: packing.PackedLayout, lr,
         wbuf2 = packing.quantize_to_storage(layout, wbuf2)
         if weights is not None:
             new_slots[packing.WEIGHT_SLOT] = wbuf2
+    if layout.shards > 1:
+        # the ZeRO step's one params all-gather: the locally-updated
+        # weight rows leave the shard domain exactly once, here; every
+        # slot (including the master / persistent weight buffer) stays
+        # row-sharded across steps
+        wbuf2 = packing.gather_rows(layout, wbuf2)
     new_params = packing.unpack(layout, wbuf2)
     return new_params, new_slots
 
@@ -354,9 +360,14 @@ def make_optimizer(rule: LayerwiseRule, learning_rate: float | Schedule, *,
     quant = slot_dtype == "int8"
 
     def init(params: Pytree, stacked: Optional[Pytree] = None,
-             master: bool = False) -> OptState:
+             master: bool = False, zero_shards: int = 1) -> OptState:
         step = jnp.zeros((), jnp.int32)
         if stacked is None:
+            if zero_shards > 1:
+                raise ValueError(
+                    "zero_shards > 1 requires the flat-packed layout: "
+                    "init(params, stacked=marker). The tree layout "
+                    "already shards leaf-for-leaf under pjit.")
             slots = {}
             for k in rule.slots:
                 if quant:
@@ -374,8 +385,12 @@ def make_optimizer(rule: LayerwiseRule, learning_rate: float | Schedule, *,
                 slots[packing.MASTER_SLOT] = tree_map(
                     lambda p: p.astype(jnp.float32), params)
             return OptState(step=step, slots=slots)
+        # zero_shards > 1: ZeRO row-sharded layout — rows padded to a
+        # multiple of shards * block_rows so every slot buffer splits
+        # evenly across the mesh data axis (see packing.PackedLayout)
         layout = packing.build_layout(
-            params, normalize_stacked(params, stacked))
+            params, normalize_stacked(params, stacked),
+            shards=int(zero_shards))
         zeros = functools.partial(jnp.zeros, layout.buffer_shape,
                                   jnp.float32)
         slots = {}
@@ -405,9 +420,14 @@ def make_optimizer(rule: LayerwiseRule, learning_rate: float | Schedule, *,
         if state.layout is not None:
             if stacked is not None:
                 packing.check_marker(state.layout, params, stacked)
+            # ZeRO layouts fall back to the jnp engine: pallas_call has
+            # no GSPMD partitioning rules, so a megakernel over the
+            # row-sharded buffers would force a full gather per step —
+            # the exact memory the sharding exists to avoid
+            up = use_pallas and state.layout.shards == 1
             new_params, new_slots = _packed_update(
                 rule, state.layout, lr, ctx, grads, slots, params,
-                use_pallas, master=master, weights=weights,
+                up, master=master, weights=weights,
                 slot_dtype=slot_dtype)
         else:
             if use_pallas:

@@ -95,7 +95,17 @@ class Segment:
 
 @dataclasses.dataclass(frozen=True)
 class PackedLayout:
-    """Static description of a whole-pytree superbuffer packing."""
+    """Static description of a whole-pytree superbuffer packing.
+
+    ``shards > 1`` marks a ZeRO row-sharded layout: ``total_rows`` is
+    padded up to a multiple of ``shards * block_rows`` (``pad_rows``
+    all-zero rows at the tail) so the buffer splits evenly across the
+    mesh ``data`` axis with every shard boundary on a block boundary —
+    the per-block int8 scale groups never span shards, so quantized
+    slots shard for free. The pad rows belong to no slice (sentinel id
+    ``num_slices``): reductions drop them and broadcasts over them are
+    harmless because every buffer keeps them exactly zero.
+    """
 
     segments: tuple[Segment, ...]
     treedef: Any                # pytree structure (hashable)
@@ -103,6 +113,8 @@ class PackedLayout:
     block_rows: int
     total_rows: int
     num_slices: int
+    shards: int = 1             # ZeRO row-shard count (1 = replicated)
+    pad_rows: int = 0           # all-zero tail rows padding to shards
 
     @property
     def buffer_shape(self) -> tuple[int, int]:
@@ -111,6 +123,11 @@ class PackedLayout:
     @property
     def num_blocks(self) -> int:
         return self.total_rows // self.block_rows
+
+    @property
+    def base_rows(self) -> int:
+        """Rows holding real data (the shards=1 layout's total_rows)."""
+        return self.total_rows - self.pad_rows
 
     def stacked_flags(self) -> tuple[bool, ...]:
         return tuple(s.stacked for s in self.segments)
@@ -125,7 +142,8 @@ def _build_layout_static(treedef, names: tuple[str, ...],
                          shapes: tuple[tuple[int, ...], ...],
                          dtypes: tuple[str, ...],
                          stacked: tuple[bool, ...],
-                         lane: int, block_rows: int) -> PackedLayout:
+                         lane: int, block_rows: int,
+                         shards: int) -> PackedLayout:
     segments = []
     row_offset = 0
     slice_offset = 0
@@ -146,33 +164,55 @@ def _build_layout_static(treedef, names: tuple[str, ...],
             adapt=_slice_rank(shape, stk) > 1))
         row_offset += layers * rows
         slice_offset += layers
+    pad = 0
+    if shards > 1:
+        # pad to a multiple of shards * block_rows: even row shards with
+        # every shard boundary on a block boundary (int8 scale groups
+        # never straddle shards)
+        quantum = shards * block_rows
+        pad = -row_offset % quantum
     return PackedLayout(segments=tuple(segments), treedef=treedef,
                         lane=lane, block_rows=block_rows,
-                        total_rows=row_offset, num_slices=slice_offset)
+                        total_rows=row_offset + pad,
+                        num_slices=slice_offset,
+                        shards=shards, pad_rows=pad)
 
 
 def build_layout(params: Pytree, stacked: Pytree, *, lane: int = LANE,
-                 block_rows: int = BLOCK_ROWS) -> PackedLayout:
+                 block_rows: int = BLOCK_ROWS,
+                 shards: int = 1) -> PackedLayout:
     """Static layout from a param pytree (arrays or ShapeDtypeStructs)
-    and a full bool pytree marking (L, ...) layer-stacked leaves."""
+    and a full bool pytree marking (L, ...) layer-stacked leaves.
+
+    ``shards``: ZeRO row-shard count — rows are padded so the buffer
+    splits evenly across that many shards (see :class:`PackedLayout`).
+    """
     leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
     if not leaves:
         raise ValueError("cannot build a packed layout for an empty pytree")
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
     stk_leaves = treedef.flatten_up_to(stacked)
     names = tuple(path_str(path) for path, _ in leaves)
     shapes = tuple(tuple(leaf.shape) for _, leaf in leaves)
     dtypes = tuple(jnp.dtype(leaf.dtype).name for _, leaf in leaves)
     flags = tuple(bool(s) for s in stk_leaves)
     return _build_layout_static(treedef, names, shapes, dtypes, flags,
-                                lane, block_rows)
+                                lane, block_rows, int(shards))
 
 
 # ------------------------------------------------------- static index maps
 
 @functools.lru_cache(maxsize=64)
 def _row_slice_ids(layout: PackedLayout) -> np.ndarray:
-    """(total_rows,) int32: owning slice id of every superbuffer row."""
-    ids = np.empty(layout.total_rows, np.int32)
+    """(total_rows,) int32: owning slice id of every superbuffer row.
+
+    ZeRO pad rows get the out-of-range sentinel ``num_slices``:
+    ``segment_sum`` drops out-of-range scatter ids (pad rows never touch
+    a norm) and gather-side broadcasts clamp (harmless — every buffer is
+    exactly zero over the pad rows, so whatever scalar lands there
+    multiplies zero)."""
+    ids = np.full(layout.total_rows, layout.num_slices, np.int32)
     for seg in layout.segments:
         reps = np.repeat(
             np.arange(seg.slice_offset, seg.slice_offset + seg.layers,
@@ -210,6 +250,23 @@ def adapt_mask(layout: PackedLayout) -> jnp.ndarray:
 
 # ---------------------------------------------------------- pack / unpack
 
+def _ambient_mesh():
+    """The legacy ``with mesh:`` context's mesh, or None.
+
+    Limitation (jax 0.4.x): this is the only place the packed
+    substrate can discover a mesh at trace time — tracing a packed
+    update under jit with ``in_shardings=NamedSharding(...)`` but NO
+    ambient mesh skips every constraint below. Sharded runs must either
+    trace inside ``with mesh:`` (what this repo's pjit entry points do)
+    or use the per-leaf tree layout (``opt.init(params)``), which
+    shards cleanly leaf-for-leaf.
+    """
+    from jax.interpreters import pxla
+
+    mesh = pxla.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
 def _replicate_in_mesh(x: jnp.ndarray) -> jnp.ndarray:
     """Pin ``x`` to fully-replicated when tracing under an ambient mesh.
 
@@ -218,25 +275,47 @@ def _replicate_in_mesh(x: jnp.ndarray) -> jnp.ndarray:
     FSDP-sharded leaves inconsistently across consumers (observed: the
     per-slice norm reduction sees each element data-axis-times — a
     silently wrong trust ratio under pjit). The packed substrate's
-    contract is a replicated optimizer region, so state it explicitly;
-    GSPMD then inserts the all-gathers exactly once, at pack time.
-
-    Limitation (jax 0.4.x): the mesh is only discoverable from the
-    legacy ``with mesh:`` context — tracing a packed update under jit
-    with ``in_shardings=NamedSharding(...)`` but NO ambient mesh skips
-    the constraint and can hit the mis-partitioning above. Sharded runs
-    must either trace inside ``with mesh:`` (what this repo's pjit entry
-    points do) or use the per-leaf tree layout (``opt.init(params)``),
-    which shards cleanly leaf-for-leaf.
+    contract is an explicitly-stated optimizer region sharding; GSPMD
+    then inserts the collectives exactly once, at the constraint.
     """
-    from jax.interpreters import pxla
     from jax.sharding import NamedSharding, PartitionSpec
 
-    mesh = pxla.thread_resources.env.physical_mesh
-    if mesh.empty:
+    mesh = _ambient_mesh()
+    if mesh is None:
         return x
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, PartitionSpec(*([None] * x.ndim))))
+
+
+def constrain_rows(layout: PackedLayout, buf: jnp.ndarray) -> jnp.ndarray:
+    """Pin a superbuffer to the layout's row sharding under an ambient
+    mesh: ``P("data", None)`` for a ZeRO layout (``shards > 1``), fully
+    replicated otherwise. On a gradient buffer the data-axis constraint
+    is where GSPMD places the reduce-scatter of the batch-parallel
+    partial gradients (instead of the replicated path's all-reduce).
+    No-op without an ambient mesh, so ZeRO layouts still run (padded
+    but unsharded) on a single device — what the parity tests exploit.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return buf
+    if layout.shards > 1 and "data" in mesh.axis_names \
+            and layout.total_rows % mesh.shape["data"] == 0:
+        spec = PartitionSpec("data", *([None] * (buf.ndim - 1)))
+    else:
+        spec = PartitionSpec(*([None] * buf.ndim))
+    return jax.lax.with_sharding_constraint(
+        buf, NamedSharding(mesh, spec))
+
+
+def gather_rows(layout: PackedLayout, buf: jnp.ndarray) -> jnp.ndarray:
+    """Pin a (row-sharded) superbuffer back to fully-replicated — the
+    ZeRO step's single params all-gather, placed explicitly so it
+    happens exactly once per global step (just before ``unpack``)."""
+    del layout  # symmetry with constrain_rows; the target is replicated
+    return _replicate_in_mesh(buf)
 
 
 def pack(layout: PackedLayout, tree: Pytree) -> jnp.ndarray:
@@ -263,8 +342,11 @@ def pack(layout: PackedLayout, tree: Pytree) -> jnp.ndarray:
                 [flat, jnp.zeros((seg.layers, padded - seg.n),
                                  jnp.float32)], axis=1)
             parts.append(flat.reshape(-1))
+    if layout.pad_rows:
+        parts.append(jnp.zeros((layout.pad_rows * layout.lane,),
+                               jnp.float32))
     buf = jnp.concatenate(parts).reshape(layout.total_rows, layout.lane)
-    return _replicate_in_mesh(buf)
+    return constrain_rows(layout, buf)
 
 
 def init_master(layout: PackedLayout, params: Pytree) -> jnp.ndarray:
@@ -385,11 +467,22 @@ def dequantize_leaf_q8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
 # -------------------------------------------------- per-slice reductions
 
 def slice_sumsq(layout: PackedLayout, buf: jnp.ndarray) -> jnp.ndarray:
-    """(num_slices,) f32: sum of squares per layer slice (one pass)."""
+    """(num_slices,) f32: sum of squares per layer slice (one pass).
+
+    Under a ZeRO layout the buffer is row-sharded, so the segment sum
+    runs on local row shards (masked partials — pad rows carry the
+    out-of-range sentinel and drop out) and the result is pinned
+    replicated: ONE cross-shard reduction per norm pass, which keeps the
+    trust ratios bit-comparable to the replicated path (same f32
+    partial-sum tree, merely re-bracketed at the shard boundary).
+    """
     row_sums = jnp.sum(jnp.square(buf.astype(jnp.float32)), axis=1)
-    return jax.ops.segment_sum(row_sums, row_slice_ids(layout),
-                               num_segments=layout.num_slices,
-                               indices_are_sorted=True)
+    out = jax.ops.segment_sum(row_sums, row_slice_ids(layout),
+                              num_segments=layout.num_slices,
+                              indices_are_sorted=True)
+    if layout.shards > 1:
+        out = _replicate_in_mesh(out)
+    return out
 
 
 def slice_norms(layout: PackedLayout, a: jnp.ndarray, b: jnp.ndarray

@@ -214,17 +214,31 @@ def state_pspecs(cfg, state_shapes, mesh: Optional[Mesh] = None) -> Any:
     they inherit the param specs (momentum is sharded exactly like its
     weight). Flat-packed opt states: each slot is one (rows, lane)
     superbuffer whose rows interleave every leaf's shards, so it is kept
-    replicated (the packed substrate targets single-replica-group steps;
-    FSDP-scale runs init with ``opt.init(params)`` for the tree layout).
+    replicated — UNLESS the layout is ZeRO-sharded (``layout.shards >
+    1``, built via ``opt.init(..., zero_shards=n)``), in which case
+    every packed slot row-shards ``P("data", None)`` across the mesh
+    data axis and per-device optimizer-state memory drops to ~1/ndev.
     """
     from repro.train.state import TrainState
     from repro.core.optim_base import OptState
     pspecs = param_pspecs(cfg, state_shapes.params, mesh)
     opt = state_shapes.opt_state
     if getattr(opt, "layout", None) is not None:
+        layout = opt.layout
         # generic over slot keys: covers the int8 code buffers and their
         # (num_blocks, 1) scale siblings alongside the f32 superbuffers
-        slot_specs = {k: P(None, None) for k in opt.slots}
+        if getattr(layout, "shards", 1) > 1 and mesh is not None \
+                and "data" in mesh.axis_names \
+                and layout.total_rows % (mesh.shape["data"]
+                                         * layout.block_rows) == 0:
+            # ZeRO layout: every packed slot row-shards across the data
+            # axis. Rows are padded to a multiple of shards * block_rows
+            # at build time, so the (num_blocks, 1) scale siblings split
+            # on the same block-aligned boundaries and the divisibility
+            # check covers both shapes at once.
+            slot_specs = {k: P("data", None) for k in opt.slots}
+        else:
+            slot_specs = {k: P(None, None) for k in opt.slots}
         opt_spec = OptState(step=P(), slots=slot_specs, layout=opt.layout)
     else:
         from repro.core.optim_base import SCALE_SUFFIX

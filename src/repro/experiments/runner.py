@@ -44,7 +44,7 @@ import math
 import os
 import shutil
 import time
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +58,7 @@ from repro.data import (TokenTaskConfig, batch_iterator, synthetic_mnist,
 from repro.experiments.record import (TrajectoryRecorder, atomic_write_json,
                                       load_json, truncate_trajectory)
 from repro.experiments.spec import CellSpec, GridSpec
+from repro.launch.mesh import mesh_from_spec
 from repro.models import build_model
 from repro.train import TrainPipeline, generalization_error, make_eval_step
 
@@ -105,6 +106,7 @@ class GridRunner:
         self.model = build_model(self.cfg)
         self._eval_step = jax.jit(make_eval_step(self.model, self.cfg))
         self._pipelines: dict[tuple, TrainPipeline] = {}
+        self._meshes: dict[str, Any] = {}
         self._data = None
         self._eval_tokens = None
         self._steps_done = 0
@@ -168,6 +170,15 @@ class GridRunner:
             return min(cell.batch, self.grid.n_train)
         return cell.batch
 
+    def _cell_mesh(self, cell: CellSpec):
+        """The (cached) mesh a cell's pipeline trains under; None for
+        the default single-device cells."""
+        if not cell.mesh:
+            return None
+        if cell.mesh not in self._meshes:
+            self._meshes[cell.mesh] = mesh_from_spec(cell.mesh)
+        return self._meshes[cell.mesh]
+
     def pipeline(self, cell: CellSpec) -> TrainPipeline:
         key = cell.pipeline_key()
         if key not in self._pipelines:
@@ -178,6 +189,7 @@ class GridRunner:
             self._pipelines[key] = TrainPipeline(
                 self.model, cell.build_optimizer(), self.cfg,
                 accum_steps=cell.accum_steps, precision=cell.precision,
+                mesh=self._cell_mesh(cell), zero=cell.zero,
                 donate=False, stats_fn=stats_fn)
         return self._pipelines[key]
 
@@ -222,7 +234,9 @@ class GridRunner:
         ckpt_path = os.path.join(cdir, "state.npz")
         start = 0
         if resume and os.path.exists(ckpt_path):
-            state = restore_train_state(ckpt_path, state)
+            # place_state re-establishes mesh shardings (incl. ZeRO row
+            # shards) that the host-side npz restore discarded
+            state = pipe.place_state(restore_train_state(ckpt_path, state))
             start = int(jax.device_get(state.opt_state.step))
             kept = truncate_trajectory(traj_path, keep_below_step=start)
             assert kept == start, (
@@ -268,6 +282,10 @@ class GridRunner:
             recorder.close()
 
         row = dict(cell.to_json())
+        if pipe.mesh is not None:
+            # the shared eval step is plain-jit: evaluate on gathered
+            # host arrays rather than mesh-committed (ZeRO-sharded) ones
+            state = jax.device_get(state)
         row.update(self._evaluate(cell, state))
         row.update(steps=steps, loss=float(metrics["loss"]),
                    wall_s=round(time.perf_counter() - t0, 1))

@@ -102,6 +102,17 @@ class CellSpec:
     vocab_size: int = 0                 # LM: data + reduced-model vocab
     model_layers: int = 0               # LM: reduced() max_layers
     model_d_model: int = 0              # LM: reduced() max_d_model
+    # --- execution placement (the ZeRO study's axis) ---
+    # device mesh the cell's TrainPipeline runs under, as a
+    # launch.mesh.mesh_from_spec string ("" = no mesh / single device;
+    # "8x1" = 8-way data parallel; "auto" = all local devices)
+    mesh: str = ""
+    # ZeRO: row-shard the packed optimizer slots across the mesh's data
+    # axis (requires mesh). Excluded from cell_seed like the
+    # lr_schedule-family tags, so a zero cell shares init + data stream
+    # with its replicated twin and placement is the ONLY varying
+    # ingredient.
+    zero: bool = False
 
     @property
     def cell_id(self) -> str:
@@ -114,16 +125,23 @@ class CellSpec:
             base += f"-{self.lr_schedule}"
         if self.opt_state_dtype != "f32":
             base += f"-{self.opt_state_dtype}"
+        if self.mesh:
+            base += f"-m{self.mesh}"
+        if self.zero:
+            base += "-zero"
         return base
 
     def cell_seed(self) -> int:
         """Deterministic rng seed from the cell's coordinates (CRC32 of
         the id string — stable across processes and grid edits, unlike
-        Python's salted ``hash``). The lr-schedule and opt-state-dtype
-        tags are deliberately EXCLUDED: warmup-ablation cells share
-        init + data stream so the schedule is the only varying
-        ingredient, and int8-vs-f32 parity cells likewise differ ONLY
-        in the slot storage dtype."""
+        Python's salted ``hash``). The lr-schedule, opt-state-dtype and
+        mesh/zero placement tags are deliberately EXCLUDED:
+        warmup-ablation cells share init + data stream so the schedule
+        is the only varying ingredient, int8-vs-f32 parity cells
+        likewise differ ONLY in the slot storage dtype, and a
+        ZeRO-sharded cell trains the same trajectory as its replicated
+        twin (placement must not change the numbers it is compared
+        against)."""
         key = (f"{self.grid}/{self.optimizer}-b{self.batch}"
                f"-{self.precision}-a{self.accum_steps}-{self.lr_policy}"
                f"-s{self.seed}")
@@ -205,7 +223,8 @@ class CellSpec:
                 self.warmup_frac, self.adam_base_lr, self.opt_state_dtype,
                 tuple(map(tuple, self.base_lr_overrides)), self.family,
                 self.seq_len, self.vocab_size, self.model_layers,
-                self.model_d_model, self.epochs, self.n_train)
+                self.model_d_model, self.epochs, self.n_train,
+                self.mesh, self.zero)
 
     def to_json(self) -> dict:
         """JSON-normalized (tuples -> lists) so in-memory manifest rows
@@ -244,6 +263,10 @@ class GridSpec:
     # optimizer-state storage dtypes to sweep (int8-vs-f32 parity axis)
     opt_state_dtypes: tuple[str, ...] = ("f32",)
     base_lr_overrides: tuple = ()       # ((optimizer, base_lr), ...)
+    # execution placement, shared by every cell (protocol-level, not a
+    # swept axis): mesh spec string + ZeRO optimizer-state sharding
+    mesh: str = ""
+    zero: bool = False
     # --- LM-family protocol (family="lm" only) ---
     seq_len: int = 0                    # training sequence length
     vocab_size: int = 0                 # synthetic-corpus + model vocab
@@ -266,6 +289,10 @@ class GridSpec:
         if self.family == "lm" and self.seq_len <= 0:
             raise ValueError(
                 f"grid {self.name!r}: family='lm' requires seq_len > 0")
+        if self.zero and not self.mesh:
+            raise ValueError(
+                f"grid {self.name!r}: zero=True requires a mesh spec "
+                "(the optimizer slots shard across its data axis)")
         out = []
         for batch, opt, prec, accum, policy, sched, sdtype, seed in \
                 itertools.product(
@@ -290,7 +317,8 @@ class GridSpec:
                 family=self.family,
                 seq_len=self.seq_len, vocab_size=self.vocab_size,
                 model_layers=self.model_layers,
-                model_d_model=self.model_d_model))
+                model_d_model=self.model_d_model,
+                mesh=self.mesh, zero=self.zero))
         return out
 
     @property
@@ -371,6 +399,18 @@ GRIDS: dict[str, GridSpec] = {
         lr_policies=("linear",), trust_coef=0.02,
         opt_state_dtypes=("f32", "int8"),
         epochs=8, n_train=2048, n_test=512),
+    # The smoke cells under ZeRO: an (8, 1) data-parallel mesh with the
+    # packed optimizer slots row-sharded across it. mesh/zero are
+    # excluded from cell_seed, so these cells share init + data with
+    # lars_vs_sgd_smoke and the claim check (LARS >= SGD at the large
+    # batch) must reproduce under sharded state. Runs in nightly under
+    # 8 forced host devices.
+    "zero_smoke": GridSpec(
+        name="zero_smoke",
+        batches=(64, 1024),
+        lr_policies=("linear",), trust_coef=0.02,
+        epochs=8, n_train=2048, n_test=512,
+        mesh="8x1", zero=True),
     # The warmup ablation as grid cells (ROADMAP item): the large-batch
     # SGD cell with and without linear warmup under poly decay, LARS
     # alongside — does warmup rescue the scaled-LR collapse?

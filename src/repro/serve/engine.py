@@ -572,10 +572,16 @@ class ServeEngine:
                     self._queue_snapshot(r.req.tokens, r.slot)
                 self._record(r.slot, int(first[i]), now, finished)
             else:
-                if self.pool is not None:
-                    # chunk-boundary snapshot: lets a concurrent request
-                    # sharing only PART of this prompt (system prompt)
-                    # hit before this one even finishes prefilling
+                if self.pool is not None \
+                        and r.req.prompt_len - r.start <= C:
+                    # LAST chunk-boundary snapshot only: it still lets a
+                    # concurrent request sharing only PART of this
+                    # prompt (system prompt) hit before this one
+                    # finishes prefilling, but distinct-suffix traffic
+                    # stops inserting one never-reused entry per chunk
+                    # (each a device row copy + an LRU eviction under
+                    # small pools). Prompt-completion and retirement
+                    # snapshots above/in _record are unchanged.
                     self._queue_snapshot(r.req.tokens[:r.start], r.slot)
                 still.append(r)
         self._pending = still

@@ -24,8 +24,15 @@ through gradient accumulation + LR scaling/warmup + mixed precision.
   in/out shardings from :mod:`repro.distributed.sharding` and
   ``donate_argnums=(0,)`` so the TrainState is updated in place
   (params + slots never double-buffer). Tracing happens under
-  ``with mesh:`` — required by the packed substrate's replication
-  constraint (see ``packing._replicate_in_mesh``).
+  ``with mesh:`` — required by the packed substrate's sharding
+  constraints (see ``packing.constrain_rows``).
+* **ZeRO optimizer-state sharding** — ``zero=True`` (requires a mesh
+  with a ``data`` axis) row-shards every packed optimizer slot across
+  the data axis: the layout pads rows to a multiple of
+  ``ndata * block_rows``, the mean-grad superbuffer is reduce-scattered
+  into the local shard, the layer-wise update runs on local rows (norms
+  finalize in one cross-shard reduction), and params all-gather once
+  per global step. Per-device slot memory drops to ~1/ndata.
 
 Typical use::
 
@@ -111,13 +118,26 @@ class TrainPipeline:
     def __init__(self, model, optimizer, cfg=None, *, accum_steps: int = 1,
                  precision: str | Precision = "f32", mesh=None,
                  donate: bool = True, packed: bool = True,
-                 fuse_update: bool | str = "auto",
+                 fuse_update: bool | str = "auto", zero: bool = False,
                  stats_fn: Optional[Callable] = None):
         if accum_steps < 1:
             raise ValueError(f"accum_steps must be >= 1, got {accum_steps}")
         if fuse_update not in (True, False, "auto"):
             raise ValueError(f"fuse_update must be True/False/'auto', "
                              f"got {fuse_update!r}")
+        if zero:
+            if mesh is None:
+                raise ValueError(
+                    "zero=True (ZeRO-sharded optimizer states) requires "
+                    "a mesh — the slots shard across its 'data' axis")
+            if not packed:
+                raise ValueError(
+                    "zero=True requires the flat-packed substrate "
+                    "(packed=True): ZeRO shards the superbuffer rows")
+            if "data" not in mesh.axis_names:
+                raise ValueError(
+                    f"zero=True needs a mesh with a 'data' axis, got "
+                    f"axes {mesh.axis_names}")
         self.model = model
         self.optimizer = optimizer
         self.cfg = cfg if cfg is not None else model.cfg
@@ -126,16 +146,27 @@ class TrainPipeline:
         self.mesh = mesh
         self.donate = donate
         self.packed = packed
+        # ZeRO: row-shard every packed optimizer slot across the mesh
+        # data axis (1/ndev slot memory per device). The step then runs:
+        # reduce-scatter the mean-grad superbuffer into the local shard
+        # (the pack's sharding constraint), update locally, all-gather
+        # the params once per global step (gather_rows before unpack).
+        self.zero = zero
+        self._zero_shards = int(mesh.shape["data"]) if zero else 1
         # Fused accumulation epilogue: with accum_steps > 1 and a
         # flat-packed opt state, microbatch gradients accumulate directly
         # in the (rows, lane) superbuffer inside the scan and the
         # optimizer consumes the buffer in place (PackedGrads) — the
         # per-layer grad norms finalize once on the accumulated buffer,
         # eliminating the epilogue's full gradient pack (and the Adam
-        # family's second g^2 pack). "auto" fuses whenever it applies;
-        # disabled under a mesh (packing each microbatch inside the scan
-        # would force per-microbatch cross-shard gathers) and at
-        # accum_steps == 1, which stays bit-identical to make_train_step.
+        # family's second g^2 pack). "auto" fuses whenever it applies
+        # and elides at accum_steps == 1 (bit-identical to
+        # make_train_step). Under a mesh the fuse is valid whenever the
+        # mesh is pure data-parallel (model axis size 1); "auto" only
+        # takes it in ZeRO mode, where each microbatch pack lands as a
+        # reduce-scatter into the local shard (cheaper than the
+        # replicated path's per-microbatch all-gather, which is why
+        # plain data-parallel "auto" still runs unfused).
         self.fuse_update = fuse_update
         # optional per-step telemetry computed INSIDE the jitted step on
         # (params, mean grads, stacked marker) — e.g. the per-layer
@@ -159,9 +190,11 @@ class TrainPipeline:
         master weights as an optimizer slot when the policy keeps one."""
         params = self.model.init(key)
         params = cast_floats(params, self.precision.compute_dtype)
+        kw = {"zero_shards": self._zero_shards} \
+            if self._zero_shards > 1 else {}
         opt_state = self.optimizer.init(
             params, stacked=self._stacked,
-            master=self.precision.master_weights)
+            master=self.precision.master_weights, **kw)
         state = TrainState(params=params, opt_state=opt_state)
         return self.place_state(state)
 
@@ -189,20 +222,32 @@ class TrainPipeline:
         k = self.accum_steps
         compute_dtype = self.precision.compute_dtype
         stats_fn = self.stats_fn
-        fuse_mode, mesh = self.fuse_update, self.mesh
+        fuse_mode, mesh, zero = self.fuse_update, self.mesh, self.zero
+        # a pure data-parallel mesh (model axis size 1) keeps every
+        # microbatch gradient in one replica group per shard row, so the
+        # fused packed accumulation is valid under it
+        pure_data = mesh is None or all(
+            mesh.shape[a] == 1 for a in mesh.axis_names
+            if a not in ("data", "pod"))
 
         def step(state: TrainState, batch) -> tuple[TrainState, dict]:
             batch = cast_floats(batch, compute_dtype)
             # layout is OptState METADATA — a static Python value at
             # trace time, so the fuse decision shapes the traced graph
             layout = state.opt_state.layout
-            fuse = (fuse_mode is not False and k > 1 and mesh is None
-                    and layout is not None)
-            if fuse_mode is True and not fuse:
+            can_fuse = k > 1 and layout is not None and pure_data
+            if fuse_mode is True and not can_fuse:
                 raise ValueError(
                     "fuse_update=True needs accum_steps > 1, a flat-"
-                    "packed opt state and no mesh; use fuse_update="
-                    "'auto' to fall back silently")
+                    "packed opt state, and no mesh or a pure data-"
+                    "parallel mesh (model axis size 1); use "
+                    "fuse_update='auto' to fall back silently")
+            # "auto" fuses off-mesh and in ZeRO mode (per-microbatch
+            # packs reduce-scatter into the local shard); under a
+            # replicated mesh each pack would all-gather instead, so
+            # auto stays unfused there — explicit True overrides.
+            fuse = can_fuse and (fuse_mode is True or (
+                fuse_mode is not False and (mesh is None or zero)))
 
             def loss_fn(params, mb):
                 return _forward_and_loss(model, cfg, params, mb)

@@ -126,14 +126,15 @@ def _workload(family: str, batch: int):
 
 
 def run_trajectory(family: str, opt_name: str, batch: int, *,
-                   lr: float = None, mesh=None) -> dict:
+                   lr: float = None, mesh=None, zero: bool = False) -> dict:
     """The pinned workload: 20 seeded steps, losses + final trust table."""
     lr = lr if lr is not None else (LM_LR if family == "lm" else LR)
     cfg, model, it = _workload(family, batch)
     stats_fn = grad_stats.stats_hook(eta=TRUST_COEF,
                                      weight_decay=WEIGHT_DECAY)
     pipe = TrainPipeline(model, _make_opt(opt_name, lr), cfg,
-                         donate=False, mesh=mesh, stats_fn=stats_fn)
+                         donate=False, mesh=mesh, zero=zero,
+                         stats_fn=stats_fn)
     state = pipe.init_state(jax.random.key(7))
     losses = []
     metrics = {}
