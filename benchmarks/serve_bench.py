@@ -20,6 +20,12 @@ TTFT/latency percentiles and useful tok/s, pinning two claims:
 Both claims are asserted. Every scenario also asserts the decode hot
 path stayed ONE traced call per emitted token.
 
+Part 3 (library): the SLO scenario-library shapes (steady / bursty /
+diurnal / heavy-tail, priority-tiered) through the priority engine as
+configured by the serve experiment grid — throughput/tail/preemption
+rows only; the A1-A3 SLO claims on these shapes are checked by
+``repro.launch.serve_experiment`` (EXPERIMENTS_serve.json).
+
 Usage: PYTHONPATH=src python -m benchmarks.serve_bench [--quick]
        [--arch qwen3-14b] [--out BENCH_serve.json] [--skip-baseline]
 """
@@ -200,6 +206,28 @@ def run_scenarios(model, params, cfg, args) -> tuple[dict, dict]:
     return rows, claims
 
 
+def run_library(model, params, cfg, args) -> dict:
+    """Scenario-library rows: each SLO traffic shape (steady / bursty /
+    diurnal / heavy-tail) through the priority engine exactly as the
+    serve experiment grid configures it — the bench records throughput,
+    occupancy, per-tier tails, and preemption counts; the A1-A3 claim
+    checks on these shapes live in the experiment harness
+    (EXPERIMENTS_serve.json)."""
+    from repro.experiments.serve_grid import ServeCellSpec, get_serve_grid
+
+    grid = get_serve_grid("serve_slo_smoke")
+    repeats = 1 if args.quick else grid.repeats
+    rows = {}
+    for scen in ("steady", "bursty", "diurnal", "heavy_tail"):
+        cell = ServeCellSpec(grid.name, scen, "priority", args.slots)
+        row = run_scenario(model, params,
+                           grid.scenario_for(cell, cfg.vocab_size),
+                           time_scale=grid.time_scale_s, repeats=repeats)
+        assert row["decode_traces"] <= 1, (scen, row["decode_traces"])
+        rows[cell.cell_id] = row
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -233,9 +261,14 @@ def main() -> None:
     print(format_scenarios(scenarios))
     print("claims:", {k: v for k, v in claims.items()})
 
+    library = run_library(model, params, cfg, args)
+    print()
+    print(format_scenarios(library))
+
     payload = {"arch": cfg.name, "family": cfg.family, "slots": args.slots,
                "requests": n_req, "backend": jax.default_backend(),
-               "rows": rows, "scenarios": scenarios, "claims": claims}
+               "rows": rows, "scenarios": scenarios, "library": library,
+               "claims": claims}
     if args.out:
         write_serve_report(args.out, payload)
         print(f"wrote {args.out}")

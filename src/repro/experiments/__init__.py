@@ -12,7 +12,9 @@ The declarative pipeline the repo's studies report through:
 * :mod:`repro.experiments.record` — streamed JSONL trajectories;
 * :mod:`repro.experiments.report` — accuracy-vs-batch (CNN) /
   perplexity-vs-batch (LM) aggregation + the studies' claim checks
-  (``EXPERIMENTS_<study>.json``).
+  (``EXPERIMENTS_<study>.json``);
+* :mod:`repro.experiments.serve_grid` — the serve-side SLO sweep
+  (scenario x scheduler x slots x sampler -> EXPERIMENTS_serve.json).
 """
 
 from repro.experiments.spec import (CellSpec, GridSpec, GRIDS,  # noqa: F401
@@ -22,3 +24,6 @@ from repro.experiments.record import (TrajectoryRecorder,  # noqa: F401
                                       read_trajectory)
 from repro.experiments.report import (aggregate, format_table,  # noqa: F401
                                       write_report)
+from repro.experiments.serve_grid import (SERVE_GRIDS,  # noqa: F401
+                                          ServeCellSpec, ServeGridSpec,
+                                          get_serve_grid, run_serve_grid)

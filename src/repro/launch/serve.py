@@ -12,6 +12,11 @@ history (shared system prompt + prior turns + prior outputs). With
 from the prefix store, so only the new user tokens are prefilled — the
 per-turn prefix hit rate is reported.
 
+``--scenario NAME`` replays a scenario-library traffic shape (steady /
+bursty / diurnal / heavy_tail, priority-tiered) through the engine and
+prints the per-class report; combine with ``--slos`` to enable the
+priority scheduler (tier-aware admission + SLO-driven preemption).
+
 Examples::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
@@ -21,6 +26,9 @@ Examples::
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
         --session 4 --turns 3 --shared-prefix 64 --prefix-entries 16 \
         --prefill-chunk 16
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
+        --scenario bursty --slos 0:0.05:2,1:5:60 --prefill-chunk 8 \
+        --prefix-entries 32 --reserve-slots 1 --time-scale 1.0
 """
 
 from __future__ import annotations
@@ -127,6 +135,47 @@ def run_sessions(engine: ServeEngine, cfg, args, rng) -> dict:
     return rep
 
 
+def parse_slos(spec: str):
+    """``tier:ttft_s[:latency_s]`` comma list -> {tier: TierSLO}."""
+    from repro.serve.scheduler import TierSLO
+    if not spec:
+        return None
+    out = {}
+    for part in spec.split(","):
+        fields = part.split(":")
+        if len(fields) not in (2, 3):
+            raise ValueError(f"bad SLO {part!r}: want tier:ttft[:latency]")
+        tier = int(fields[0])
+        out[tier] = TierSLO(float(fields[1]),
+                            float(fields[2]) if len(fields) == 3
+                            else float("inf"))
+    return out
+
+
+def run_library_scenario(engine: ServeEngine, cfg, args) -> dict:
+    """Replay a scenario-library shape and print the per-class row.
+
+    run_scenario builds its own engine from spec kwargs; here the CLI
+    already built one from its flags, so drive it directly."""
+    from repro.serve.report import (_drive_wave, format_scenarios,
+                                    scenario_waves, summarize)
+    waves = scenario_waves(args.scenario, cfg.vocab_size, seed=args.seed)
+    for wave in waves:                       # warmup: compile all shapes
+        _drive_wave(engine, wave, 0.0)
+        _drive_wave(engine, wave, args.time_scale)
+    engine.reset_stats()
+    finished, classes = [], {}
+    t0 = time.perf_counter()
+    for wave in waves:
+        finished.extend(_drive_wave(engine, wave, args.time_scale,
+                                    classes))
+    wall = time.perf_counter() - t0
+    row = summarize(finished, wall, engine, classes)
+    row["finished"] = finished
+    print(format_scenarios({args.scenario: row}))
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
@@ -155,6 +204,21 @@ def main() -> None:
                     "index (0 = disabled)")
     ap.add_argument("--prefix-min-tokens", type=int, default=4,
                     help="shortest prefix worth snapshotting")
+    ap.add_argument("--scenario", default="",
+                    help="replay a scenario-library traffic shape "
+                    "(steady | bursty | diurnal | heavy_tail)")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="scenario traffic window in seconds "
+                    "(with --scenario)")
+    ap.add_argument("--slos", default="",
+                    help="per-tier SLOs 'tier:ttft_s[:latency_s],...' — "
+                    "enables the priority scheduler (tier-aware "
+                    "admission, SLO-driven preemption)")
+    ap.add_argument("--min-slots", type=int, default=0,
+                    help="slot-autoscaling floor (0 = autoscaling off)")
+    ap.add_argument("--reserve-slots", type=int, default=0,
+                    help="free-slot headroom tier > 0 may never take "
+                    "(with --slos)")
     ap.add_argument("--session", type=int, default=0,
                     help="N concurrent multi-turn sessions sharing a "
                     "system prompt (0 = plain synthetic traffic)")
@@ -189,9 +253,20 @@ def main() -> None:
         prefill_bucket=args.prefill_bucket,
         prefill_chunk=args.prefill_chunk or None,
         prefix_entries=args.prefix_entries,
-        prefix_min_tokens=args.prefix_min_tokens, seed=args.seed)
+        prefix_min_tokens=args.prefix_min_tokens, seed=args.seed,
+        slos=parse_slos(args.slos),
+        min_slots=args.min_slots or None,
+        reserve_slots=args.reserve_slots)
 
     rng = np.random.default_rng(args.seed)
+    if args.scenario:
+        print(f"{cfg.name} ({cfg.family}) — scenario {args.scenario}, "
+              f"slots={args.slots}"
+              + (f" slos={args.slos}" if args.slos else " (fifo)")
+              + (f" reserve={args.reserve_slots}"
+                 if args.reserve_slots else ""))
+        run_library_scenario(engine, cfg, args)
+        return
     if args.session:
         rep = run_sessions(engine, cfg, args, rng)
     else:

@@ -1,0 +1,69 @@
+"""Serve-SLO experiment CLI: run a scenario x scheduler x slots x
+sampler sweep and write ``EXPERIMENTS_serve.json`` with claim checks.
+
+Examples::
+
+  # the smoke sweep behind the committed EXPERIMENTS_serve.json
+  PYTHONPATH=src python -m repro.launch.serve_experiment \
+      --grid serve_slo_smoke
+
+  # pin the traffic window instead of calibrating from the reference
+  # cell's warmup wall (comparing machines)
+  PYTHONPATH=src python -m repro.launch.serve_experiment \
+      --grid serve_slo_smoke --time-scale 2.0 --out /tmp/serve.json
+
+Every cell replays its scenario's arrival schedule under ONE shared
+``time_scale``, so FIFO and priority cells see identical traffic and
+the A1/A2 claims compare policy, not timing luck.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.experiments.serve_grid import (SERVE_GRIDS, format_serve_grid,
+                                          get_serve_grid, run_serve_grid,
+                                          write_serve_experiments)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", choices=sorted(SERVE_GRIDS),
+                    default="serve_slo_smoke",
+                    help="named serve grid from the registry")
+    ap.add_argument("--list-grids", action="store_true",
+                    help="print the registry (name, cells) and exit")
+    ap.add_argument("--list-cells", action="store_true",
+                    help="print the grid's cell ids and exit")
+    ap.add_argument("--out", default=None,
+                    help="report path (default: the grid's registered "
+                    "file, EXPERIMENTS_serve.json for the smoke grid)")
+    ap.add_argument("--time-scale", type=float, default=None,
+                    help="traffic window in seconds (default: calibrate "
+                    "from the reference cell's warmup wall)")
+    args = ap.parse_args(argv)
+
+    if args.list_grids:
+        for name, grid in sorted(SERVE_GRIDS.items()):
+            print(f"{name}: {len(grid.cells)} cells on {grid.arch} "
+                  f"-> {grid.report_file}")
+        return 0
+    grid = get_serve_grid(args.grid)
+    if args.list_cells:
+        for cell in grid.cells:
+            print(cell.cell_id)
+        return 0
+
+    print(f"running serve grid {grid.name} ({len(grid.cells)} cells)")
+    payload = run_serve_grid(grid, time_scale=args.time_scale)
+    out = args.out or grid.report_file
+    write_serve_experiments(out, payload)
+    print(format_serve_grid(payload))
+    print(f"report -> {out}")
+    return 0 if all(v for k, v in payload["claims"].items()
+                    if isinstance(v, bool)) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

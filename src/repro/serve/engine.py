@@ -34,8 +34,8 @@ from repro.serve import sampling
 from repro.serve.cache import SlotCache
 from repro.serve.prefix import PrefixPool
 from repro.serve.sampling import SamplerConfig
-from repro.serve.scheduler import (FinishedRequest, Request,
-                                   RequestScheduler)
+from repro.serve.scheduler import (FinishedRequest, PriorityScheduler,
+                                   Request, RequestScheduler)
 
 Pytree = Any
 
@@ -131,6 +131,23 @@ class ServeEngine:
     — ``submit()`` between ``step()`` calls injects traffic mid-flight;
     each ``step()`` admits whatever fits into free slots and decodes
     ONE token for every resident sequence.
+
+    Passing ``slos`` ({tier: TierSLO}) swaps the FIFO scheduler for the
+    :class:`PriorityScheduler`: admission orders by (aged) tier, and an
+    SLO-driven preemption pass runs before admission each tick — when a
+    queued high-tier request has burned ``preempt_at`` of its TTFT
+    budget and no slot is free, the worst over-budget lower-tier decode
+    is evicted. Its resident state (prompt + emitted[:-1]) is
+    snapshotted into the prefix store and PINNED, so re-admission
+    replays the emitted tokens as a one-suffix-token prefill and the
+    token stream resumes byte-identically (position-folded sampling).
+    ``min_slots`` bounds slot autoscaling: the admission target starts
+    there and ramps one slot per tick while the queue is non-empty
+    (decaying back when it drains), so light load runs small stable
+    batches and bursts still reach ``slots``. ``reserve_slots`` keeps
+    that many slots off-limits to tier > 0 admissions, so a tier-0
+    arrival never waits behind a wall of un-preemptable mid-prefill
+    batch rows.
     """
 
     def __init__(self, model, params, cfg=None, *, slots: int = 4,
@@ -139,7 +156,11 @@ class ServeEngine:
                  prefill_bucket: int = 1, max_queue: int = 1024,
                  prefill_chunk: Optional[int] = None,
                  prefix_entries: int = 0, prefix_min_tokens: int = 4,
-                 admit_limit: Optional[int] = None, seed: int = 0):
+                 admit_limit: Optional[int] = None, seed: int = 0,
+                 slos=None, min_slots: Optional[int] = None,
+                 aging_s: Optional[float] = None, preempt_at: float = 0.5,
+                 over_budget_only: bool = False, preempt: bool = True,
+                 reserve_slots: int = 0):
         self.model = model
         self.cfg = cfg if cfg is not None else model.cfg
         if self.cfg.family not in SERVE_FAMILIES:
@@ -159,8 +180,22 @@ class ServeEngine:
                           if use_flash is None else use_flash)
         self.seed = seed
         self.cache = SlotCache(model, slots, capacity, mesh=mesh)
-        self.scheduler = RequestScheduler(self.cache, max_queue=max_queue,
-                                          prefill_bucket=prefill_bucket)
+        if slos is not None:
+            self.scheduler: RequestScheduler = PriorityScheduler(
+                self.cache, slos=slos, max_queue=max_queue,
+                prefill_bucket=prefill_bucket, aging_s=aging_s,
+                preempt_at=preempt_at, over_budget_only=over_budget_only,
+                reserve_slots=reserve_slots)
+        else:
+            self.scheduler = RequestScheduler(
+                self.cache, max_queue=max_queue,
+                prefill_bucket=prefill_bucket)
+        self.preempt_enabled = preempt and slos is not None
+        if min_slots is not None and not 1 <= min_slots <= slots:
+            raise ValueError(f"min_slots must be in [1, {slots}]")
+        self.min_slots = min_slots
+        self._slot_target = min_slots if min_slots is not None else slots
+        self._preempt_holds: dict[int, int] = {}   # rid -> pinned entry
         self._next_rid = 0
         self.traces = {"decode": 0, "admit": 0, "admit_chunk": 0,
                        "restore": 0, "snap": 0}
@@ -168,7 +203,9 @@ class ServeEngine:
                       "chunk_calls": 0, "restore_calls": 0,
                       "snap_calls": 0, "prefix_hits": 0,
                       "prefix_hit_tokens": 0,
-                      "tokens_out": 0, "occupancy_sum": 0.0}
+                      "tokens_out": 0, "occupancy_sum": 0.0,
+                      "ticks": 0, "preemptions": 0,
+                      "replayed_tokens": 0, "slot_target_sum": 0.0}
         # chunked admission path: active when either knob is set. With
         # `prefill_chunk` each engine tick advances every mid-prefill
         # slot by ONE C-token chunk and still decodes the resident
@@ -399,20 +436,42 @@ class ServeEngine:
 
     def submit(self, tokens, max_new_tokens: int, *,
                eos_id: Optional[int] = None,
-               rid: Optional[int] = None) -> int:
-        """Enqueue one request (bounded FIFO); returns its rid."""
+               rid: Optional[int] = None, tier: int = 0) -> int:
+        """Enqueue one request (bounded queue); returns its rid."""
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid) + 1
         req = Request(rid=rid, tokens=np.asarray(tokens),
-                      max_new_tokens=max_new_tokens, eos_id=eos_id)
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      tier=tier)
         self.scheduler.submit(req, now=time.perf_counter())
         return rid
+
+    def _admit_budget(self) -> Optional[int]:
+        """Admissions allowed this tick: the static ``admit_limit`` cap
+        combined with the autoscaled slot target."""
+        lim = self.admit_limit
+        if self.min_slots is not None:
+            budget = max(0, self._slot_target - len(self.scheduler.active))
+            lim = budget if lim is None else min(lim, budget)
+        return lim
+
+    def _autoscale(self) -> None:
+        if self.min_slots is None:
+            return
+        if self.scheduler.queued > 0:
+            self._slot_target = min(self.cache.slots, self._slot_target + 1)
+        else:
+            self._slot_target = max(self.min_slots, self._slot_target - 1)
 
     def _admit_pending(self) -> list[FinishedRequest]:
         finished = []
         for pad_len, group in sorted(
-                self.scheduler.pop_admissions(self.admit_limit).items()):
+                self.scheduler.pop_admissions(self._admit_budget()).items()):
+            group = [(s, req, t0) for s, req, t0 in group
+                     if self.scheduler.claim_popped(s, req.rid)]
+            if not group:
+                continue
             n = len(group)
             prompt = np.zeros((n, pad_len), np.int32)
             lengths = np.zeros((n,), np.int32)
@@ -443,15 +502,19 @@ class ServeEngine:
         snapshot of prompt + emitted[:-1] (exactly the tokens whose
         state is resident — the last sampled token was never fed back),
         which is what a follow-up session turn will prefix-match."""
-        req = self.scheduler.active[slot].request
+        st = self.scheduler.active[slot]
         self.stats["tokens_out"] += 1
         fin = self.scheduler.record(slot, token, now)
         if fin is None:
             return
         if self.pool is not None:
+            # this slot's resident tokens: the CONTINUATION prompt (which
+            # already contains any pre-preemption output) plus the tokens
+            # emitted by this attempt, minus the never-fed last one
             self._queue_snapshot(
-                np.concatenate([req.tokens,
-                                fin.tokens[:-1].astype(np.int32)]), slot)
+                np.concatenate([st.request.tokens,
+                                np.asarray(st.emitted[:-1], np.int32)]),
+                slot)
         finished.append(fin)
 
     def _queue_snapshot(self, tokens: np.ndarray, slot: int) -> None:
@@ -480,8 +543,10 @@ class ServeEngine:
         """Move queued requests into slots on the chunk path: consult
         the prefix pool, batch-restore matched prefix states on device
         (pinning their entries), and leave each row mid-prefill."""
-        groups = self.scheduler.pop_admissions(self.admit_limit)
+        groups = self.scheduler.pop_admissions(self._admit_budget())
         rows = [rt for g in sorted(groups) for rt in groups[g]]
+        rows = [(slot, req, t0) for slot, req, t0 in rows
+                if self.scheduler.claim_popped(slot, req.rid)]
         if not rows:
             return
         restores = []
@@ -496,6 +561,12 @@ class ServeEngine:
                     restores.append((slot, hold))
                     self.stats["prefix_hits"] += 1
                     self.stats["prefix_hit_tokens"] += start
+            # a preempted request's snapshot hold is released only now,
+            # AFTER acquire pinned it again — the entry stays live from
+            # preemption through replay with no eviction window
+            prev = self._preempt_holds.pop(req.rid, None)
+            if prev is not None:
+                self.pool.release(prev)
             key = np.asarray(sampling.make_keys(self.seed, [req.rid]))[0]
             self._pending.append(_PendingRow(slot, req, start, hold, key))
             self._prefilling.add(slot)
@@ -586,14 +657,59 @@ class ServeEngine:
                 still.append(r)
         self._pending = still
 
+    def _preempt_pass(self) -> None:
+        """Evict SLO-selected victims so deadline-risk queued requests
+        admit this same tick. Each victim's resident state is inserted
+        into the prefix store and PINNED under its rid before the slot
+        is surrendered; the snapshot copy flushes before admission can
+        rewrite the freed rows."""
+        victims = self.scheduler.select_preemptions(
+            prefilling=frozenset(self._prefilling))
+        if not victims:
+            return
+        for slot in victims:
+            st = self.scheduler.active[slot]
+            if self.pool is not None:
+                resident = np.concatenate(
+                    [st.request.tokens,
+                     np.asarray(st.emitted[:-1], np.int32)])
+                self._hold_preempt_snapshot(st.request.rid, resident, slot)
+            self.stats["preemptions"] += 1
+            self.stats["replayed_tokens"] += len(st.emitted)
+            self.scheduler.preempt(slot, time.perf_counter())
+        self._flush_snaps()     # before admission reuses the freed slots
+
+    def _hold_preempt_snapshot(self, rid: int, tokens: np.ndarray,
+                               slot: int) -> None:
+        if len(tokens) < self.pool.min_tokens:
+            return
+        e = self.pool.insert(tokens)
+        if e is not None:
+            self._snap_q.append((e, slot))
+        else:
+            # exact prefix already stored (e.g. a second preemption at
+            # the same position): its state is byte-identical, reuse it
+            e = self.pool.index.get(tokens)
+        if e is None:
+            return          # pool fully pinned: re-admission recomputes
+        self.pool.pin(e)
+        prev = self._preempt_holds.pop(rid, None)
+        if prev is not None:
+            self.pool.release(prev)
+        self._preempt_holds[rid] = e
+
     def cancel(self, rid: int) -> bool:
-        """Abort a request: drop it from the queue, or retire its slot
+        """Abort a request: drop it from the queue (tombstoning it if
+        its admission group was already popped), or retire its slot
         mid-prefill/mid-decode (releasing any pinned prefix entry). The
         survivor slots are untouched — a cancelled row's cache writes
         are masked off from the next decode on."""
         kind, slot = self.scheduler.cancel(rid)
         if kind is None:
             return False
+        hold = self._preempt_holds.pop(rid, None)
+        if hold is not None:
+            self.pool.release(hold)
         if kind == "active":
             self._prefilling.discard(slot)
             for r in list(self._pending):
@@ -606,10 +722,16 @@ class ServeEngine:
     # -------------------------------------------------------------- tick
 
     def step(self) -> list[FinishedRequest]:
-        """One engine tick: admit into free slots (chunk path: restore
-        matched prefixes + advance one chunk), then decode ONE token for
-        every live resident sequence (a single donated jit call)."""
+        """One engine tick: preempt SLO victims (priority mode), admit
+        into free slots (chunk path: restore matched prefixes + advance
+        one chunk), then decode ONE token for every live resident
+        sequence (a single donated jit call)."""
         finished: list[FinishedRequest] = []
+        self.stats["ticks"] += 1
+        self._autoscale()
+        self.stats["slot_target_sum"] += self._slot_target
+        if self.preempt_enabled:
+            self._preempt_pass()
         if self._chunked:
             self._admit_chunked()
             self._advance_chunks(finished)
@@ -644,7 +766,7 @@ class ServeEngine:
         for r in requests or ():
             if isinstance(r, Request):
                 self.submit(r.tokens, r.max_new_tokens, eos_id=r.eos_id,
-                            rid=r.rid)
+                            rid=r.rid, tier=r.tier)
             else:
                 tokens, max_new = r
                 self.submit(tokens, max_new)
@@ -670,7 +792,7 @@ class ServeEngine:
     def reset_stats(self) -> None:
         """Zero the step/occupancy counters (e.g. after a compile
         warmup); trace counters are kept — they pin the contract."""
-        self.stats = {k: 0.0 if k == "occupancy_sum" else 0
-                      for k in self.stats}
+        self.stats = {k: 0.0 if k in ("occupancy_sum", "slot_target_sum")
+                      else 0 for k in self.stats}
         if self.pool is not None:
             self.pool.stats = {k: 0 for k in self.pool.stats}

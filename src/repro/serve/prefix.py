@@ -196,6 +196,13 @@ class PrefixPool:
             raise ValueError(f"entry {entry} released below zero")
         meta.refs -= 1
 
+    def pin(self, entry: int) -> None:
+        """Pin an entry by id — the preemption path holds its snapshot
+        this way so eviction cannot recycle the device row before the
+        preempted request is re-admitted and replays from it."""
+        self.meta[entry].refs += 1
+        self._touch(entry)
+
     # ----------------------------------------------------------- insert
 
     def insert(self, tokens) -> Optional[int]:

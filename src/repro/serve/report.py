@@ -13,8 +13,14 @@ once on the same engine to compile every shape out of the measurement
 (and leaves the prefix pool warm — measured numbers are steady-state).
 
 Reported per scenario: request count, useful tok/s, wall, occupancy,
-TTFT/latency percentiles (p50/p90/p99/mean/max), decode trace count
-(the one-traced-call-per-token contract), and prefix-pool hit stats.
+TTFT/latency percentiles (p50/p90/p99/mean/max, overall and per traffic
+class — a class with zero completions gets an explicit empty row),
+decode trace count (the one-traced-call-per-token contract), preemption
+counters, and prefix-pool hit stats.
+
+The SLO scenario library (:data:`SCENARIO_LIBRARY`: steady / bursty /
+diurnal / heavy_tail) builds priority-tiered traffic for the
+``PriorityScheduler`` sweep in ``experiments/serve_grid.py``.
 """
 
 from __future__ import annotations
@@ -25,19 +31,20 @@ from typing import Any, Optional, Sequence
 
 import numpy as np
 
-from repro.experiments.record import atomic_write_json
 from repro.serve.engine import ServeEngine
 
 
 @dataclasses.dataclass
 class TrafficItem:
     """One request: ``at`` is the fractional arrival offset within the
-    wave (0 = wave start, scaled by ``time_scale`` seconds)."""
+    wave (0 = wave start, scaled by ``time_scale`` seconds); ``tier``
+    is the priority tier handed to the scheduler (0 = highest)."""
 
     tokens: np.ndarray
     max_new: int
     at: float = 0.0
     cls: str = ""        # traffic class for per-class percentiles
+    tier: int = 0
 
 
 @dataclasses.dataclass
@@ -96,6 +103,121 @@ def mixed_length_traffic(vocab: int, *, n_long: int = 3, n_short: int = 9,
     return [sorted(wave, key=lambda t: t.at)]
 
 
+# ----------------------------------------------------- scenario library
+#
+# SLO-bench traffic shapes. All of them emit two uniform classes so the
+# sweep's claim code can compare across scenarios:
+#   * ``tier0_interactive`` — tier 0, short prompt / short decode;
+#   * ``tier1_batch``       — tier 1, longer prompt / long decode
+#     (decode-heavy on purpose: they hold slots, which is exactly what
+#     makes them preemptable when a tier-0 deadline is at risk).
+
+def bursty_tier_traffic(vocab: int, *, interactive: int = 10,
+                        burst: int = 8, burst_at: float = 0.35,
+                        interactive_len: int = 32, interactive_new: int = 6,
+                        burst_len: int = 64, burst_new: int = 48,
+                        steady: bool = False,
+                        seed: int = 0) -> list[list[TrafficItem]]:
+    """Tier-0 interactive requests spread over the wave window, plus a
+    tier-1 long-decode batch that lands all at once at ``burst_at`` —
+    the flash crowd that makes FIFO miss tier-0 TTFT deadlines. With
+    ``steady=True`` the same batch load is spread evenly instead: the
+    steady-state baseline the SLO claim compares against.
+
+    Tier-0 arrivals come in PAIRS at the same offset: one of the pair
+    can always ride a reserved-headroom slot, the other exercises the
+    preemption path whenever the batch load holds the rest."""
+    rng = np.random.default_rng(seed)
+    wave = []
+    for i in range(interactive):
+        p = rng.integers(1, vocab, size=interactive_len).astype(np.int32)
+        wave.append(TrafficItem(p, interactive_new, tier=0,
+                                cls="tier0_interactive",
+                                at=0.9 * (i - i % 2) / max(1, interactive)))
+    for i in range(burst):
+        p = rng.integers(1, vocab, size=burst_len).astype(np.int32)
+        at = (0.9 * (i + 0.5) / max(1, burst) if steady
+              else burst_at + 0.005 * i)
+        wave.append(TrafficItem(p, burst_new, tier=1, cls="tier1_batch",
+                                at=at))
+    return [sorted(wave, key=lambda t: t.at)]
+
+
+def steady_tier_traffic(vocab: int, **kw) -> list[list[TrafficItem]]:
+    """The bursty mix with its batch load spread evenly over the wave —
+    identical request population, steady-state arrival process."""
+    return bursty_tier_traffic(vocab, steady=True, **kw)
+
+
+def diurnal_tier_traffic(vocab: int, *, n: int = 24, cycles: int = 2,
+                         amplitude: float = 0.8, prompt_len: int = 16,
+                         max_new: int = 10, tier0_every: int = 3,
+                         seed: int = 0) -> list[list[TrafficItem]]:
+    """Arrivals follow a sinusoidal day/night rate profile: offsets are
+    the inverse-CDF of ``1 + amplitude*sin(2*pi*cycles*t)``, so requests
+    cluster at the peaks. Every ``tier0_every``-th request is tier-0
+    interactive (half-length prompt/decode), the rest tier-1."""
+    rng = np.random.default_rng(seed)
+    grid = np.linspace(0.0, 1.0, 512)
+    rate = 1.0 + amplitude * np.sin(2 * np.pi * cycles * grid)
+    cdf = np.cumsum(rate)
+    cdf /= cdf[-1]
+    wave = []
+    for i in range(n):
+        at = float(np.interp((i + 0.5) / n, cdf, grid)) * 0.95
+        if i % tier0_every == 0:
+            p = rng.integers(1, vocab,
+                             size=max(1, prompt_len // 2)).astype(np.int32)
+            wave.append(TrafficItem(p, max(1, max_new // 2), tier=0,
+                                    cls="tier0_interactive", at=at))
+        else:
+            p = rng.integers(1, vocab, size=prompt_len).astype(np.int32)
+            wave.append(TrafficItem(p, max_new, tier=1, cls="tier1_batch",
+                                    at=at))
+    return [sorted(wave, key=lambda t: t.at)]
+
+
+def heavy_tail_tier_traffic(vocab: int, *, n: int = 18, zipf_a: float = 1.4,
+                            unit_len: int = 6, max_prompt: int = 120,
+                            base_new: int = 4, max_new_cap: int = 48,
+                            seed: int = 0) -> list[list[TrafficItem]]:
+    """Zipf prompt/output lengths: request i draws ``k ~ Zipf(zipf_a)``
+    and gets a ``k``-unit prompt and decode budget (capped). The many
+    1-unit draws are tier-0 interactive; the rare heavy tail is tier-1
+    batch — the mix where one elephant can starve a herd of mice."""
+    rng = np.random.default_rng(seed)
+    ks = rng.zipf(zipf_a, size=n)
+    wave = []
+    for i, k in enumerate(ks):
+        k = int(k)
+        plen = int(min(k * unit_len, max_prompt))
+        mnew = int(min(base_new * k, max_new_cap))
+        tier = 0 if k <= 1 else 1
+        cls = "tier0_interactive" if tier == 0 else "tier1_batch"
+        p = rng.integers(1, vocab, size=plen).astype(np.int32)
+        wave.append(TrafficItem(p, mnew, tier=tier, cls=cls,
+                                at=0.9 * i / max(1, n)))
+    return [sorted(wave, key=lambda t: t.at)]
+
+
+SCENARIO_LIBRARY = {
+    "steady": steady_tier_traffic,
+    "bursty": bursty_tier_traffic,
+    "diurnal": diurnal_tier_traffic,
+    "heavy_tail": heavy_tail_tier_traffic,
+}
+
+
+def scenario_waves(name: str, vocab: int, **kw) -> list[list[TrafficItem]]:
+    """Build a named scenario-library traffic shape."""
+    try:
+        builder = SCENARIO_LIBRARY[name]
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r}; have "
+                         f"{sorted(SCENARIO_LIBRARY)}") from None
+    return builder(vocab, **kw)
+
+
 # -------------------------------------------------------------- runner
 
 def _drive_wave(engine: ServeEngine, wave: Sequence[TrafficItem],
@@ -109,7 +231,8 @@ def _drive_wave(engine: ServeEngine, wave: Sequence[TrafficItem],
     while i < len(items) or engine.scheduler.has_work():
         now = time.perf_counter() - t0
         while i < len(items) and items[i].at * time_scale <= now:
-            rid = engine.submit(items[i].tokens, items[i].max_new)
+            rid = engine.submit(items[i].tokens, items[i].max_new,
+                                tier=items[i].tier)
             if classes is not None and items[i].cls:
                 classes[rid] = items[i].cls
             i += 1
@@ -123,10 +246,15 @@ def _drive_wave(engine: ServeEngine, wave: Sequence[TrafficItem],
 
 
 def _pct(vals: list) -> dict:
+    """Percentile row. Zero samples (a starved/cancelled traffic class)
+    returns an EXPLICIT empty row — ``count: 0`` with null percentiles —
+    rather than crashing or reporting an indistinguishable 0.0."""
     if not vals:
-        return {}
+        return {"count": 0, "empty": True, "p50": None, "p90": None,
+                "p99": None, "mean": None, "max": None}
     a = np.asarray(vals, np.float64)
-    return {"p50": round(float(np.percentile(a, 50)), 5),
+    return {"count": len(vals),
+            "p50": round(float(np.percentile(a, 50)), 5),
             "p90": round(float(np.percentile(a, 90)), 5),
             "p99": round(float(np.percentile(a, 99)), 5),
             "mean": round(float(a.mean()), 5),
@@ -146,7 +274,13 @@ def summarize(finished: list, wall: float, engine: ServeEngine,
         "latency": _pct([f.latency for f in finished]),
         "decode_traces": engine.traces["decode"],
         "chunk_calls": engine.stats["chunk_calls"],
+        "preemptions": int(engine.stats.get("preemptions", 0)),
+        "replayed_tokens": int(engine.stats.get("replayed_tokens", 0)),
     }
+    if engine.min_slots is not None:
+        ticks = max(1, int(engine.stats.get("ticks", 0)))
+        out["slot_target_mean"] = round(
+            float(engine.stats.get("slot_target_sum", 0.0)) / ticks, 3)
     if classes:
         by_class = {}
         for cls in sorted(set(classes.values())):
@@ -163,12 +297,15 @@ def summarize(finished: list, wall: float, engine: ServeEngine,
 
 def run_scenario(model, params, scenario: ServeScenario, *,
                  warmup: bool = True,
-                 time_scale: Optional[float] = None) -> dict:
+                 time_scale: Optional[float] = None,
+                 repeats: int = 1) -> dict:
     """Execute a scenario; returns its summary row. ``time_scale``
     (seconds) stretches fractional arrival offsets — pass the SAME
     value to two scenarios to compare them under identical traffic
     timing; None uses the scenario's own warmup wall (or 0 when warmup
-    is off: all arrivals immediate)."""
+    is off: all arrivals immediate). ``repeats`` replays the measured
+    traffic that many times (draining in between) and pools the
+    samples, steadying the tail percentiles."""
     engine = ServeEngine(model, params, **scenario.engine)
     warm_wall = 0.0
     staggered = any(t.at > 0 for w in scenario.waves for t in w)
@@ -185,18 +322,22 @@ def run_scenario(model, params, scenario: ServeScenario, *,
             for wave in scenario.waves:
                 _drive_wave(engine, wave, 0.0)
             warm_wall = time.perf_counter() - t0
-            # replay the staggered schedule so admission group shapes
-            # seen under timed arrivals (e.g. singleton groups) are
-            # compiled out of the measurement too
+            # replay the staggered schedule as many times as the
+            # measurement will, so admission group shapes seen under
+            # timed arrivals (singleton groups, post-pileup batches,
+            # partial prefix hits after LRU churn) are compiled out of
+            # the measurement too
             scale = time_scale if time_scale is not None else warm_wall
-            for wave in scenario.waves:
-                _drive_wave(engine, wave, scale)
+            for _ in range(max(1, repeats)):
+                for wave in scenario.waves:
+                    _drive_wave(engine, wave, scale)
         engine.reset_stats()
     scale = time_scale if time_scale is not None else warm_wall
     finished, classes = [], {}
     t0 = time.perf_counter()
-    for wave in scenario.waves:
-        finished.extend(_drive_wave(engine, wave, scale, classes))
+    for _ in range(max(1, repeats)):
+        for wave in scenario.waves:
+            finished.extend(_drive_wave(engine, wave, scale, classes))
     wall = time.perf_counter() - t0
     row = summarize(finished, wall, engine, classes)
     row["warmup_wall_s"] = round(warm_wall, 4)
@@ -213,6 +354,9 @@ def write_serve_report(path: str, payload: dict) -> dict:
     any other top-level keys already in the file."""
     import json
     import os
+
+    # deferred: repro.experiments pulls in serve_grid -> this module
+    from repro.experiments.record import atomic_write_json
     existing = {}
     if os.path.exists(path):
         try:
@@ -225,8 +369,14 @@ def write_serve_report(path: str, payload: dict) -> dict:
     return existing
 
 
+def _fmt_pct(row: dict, key: str) -> str:
+    v = row.get(key)
+    return f"{v:9.4f}" if v is not None else f"{'-':>9s}"
+
+
 def format_scenarios(scenarios: dict) -> str:
-    """Human-readable scenario table for CLI output."""
+    """Human-readable scenario table for CLI output. Empty-sample
+    percentile rows print '-' instead of a misleading 0.0."""
     lines = [f"{'scenario':>14s} {'req':>4s} {'tok/s':>8s} {'occ':>6s} "
              f"{'ttft p50':>9s} {'ttft p99':>9s} {'lat p99':>9s} "
              f"{'hit rate':>9s}"]
@@ -235,8 +385,8 @@ def format_scenarios(scenarios: dict) -> str:
         lines.append(
             f"{name:>14s} {r['requests']:4d} {r['tok_per_s']:8.1f} "
             f"{r['occupancy']:6.2f} "
-            f"{r['ttft'].get('p50', 0.0):9.4f} "
-            f"{r['ttft'].get('p99', 0.0):9.4f} "
-            f"{r['latency'].get('p99', 0.0):9.4f} "
+            f"{_fmt_pct(r['ttft'], 'p50')} "
+            f"{_fmt_pct(r['ttft'], 'p99')} "
+            f"{_fmt_pct(r['latency'], 'p99')} "
             f"{hit if hit is not None else '-':>9}")
     return "\n".join(lines)

@@ -333,3 +333,66 @@ def test_admit_limit_caps_admissions_per_tick():
     by_rid = {f.request.rid: f.tokens for f in sorted(
         out, key=lambda f: f.request.rid)}
     _same(ref, list(by_rid.values()))
+
+
+# ------------------------------------------- preemption x prefix store
+
+def test_preempt_mid_decode_pins_snapshot_and_resumes_byte_identical():
+    """Preempting a mid-decode request releases its slot but PINS its
+    resident-state snapshot (prompt + emitted[:-1]) in the prefix store:
+    while the continuation queues, the entry is hittable and cannot be
+    evicted; re-admission replays it as a one-token suffix prefill and
+    the stream resumes byte-identically (position-folded sampling).
+    Afterwards every hold drains to refs 0 and the entry is still
+    hittable."""
+    from repro.serve import parse_sampler
+    from repro.serve.scheduler import TierSLO
+
+    cfg, model, params = _model("qwen3-14b")
+    long_p, short_p = _prompts(cfg, [9, 6], seed=31)
+    sampler = parse_sampler("top_k:8:0.8")
+    slos = {0: TierSLO(1e-6, 10.0), 1: TierSLO(10.0, 60.0)}
+
+    ref = ServeEngine(model, params, cfg, slots=1, capacity=64, seed=7,
+                      sampler=sampler)
+    r_long = ref.submit(long_p, 8, tier=1)
+    r_short = ref.submit(short_p, 4, tier=0)
+    ref_by = {f.request.rid: f.tokens for f in ref.run([])}
+
+    eng = ServeEngine(model, params, cfg, slots=1, capacity=64, seed=7,
+                      sampler=sampler, prefill_chunk=4, prefix_entries=8,
+                      prefix_min_tokens=4, slos=slos)
+    e_long = eng.submit(long_p, 8, tier=1)
+    while not eng.scheduler.active or not any(
+            st.emitted for st in eng.scheduler.active.values()):
+        eng.step()                   # prefill + first decode tokens
+    eng.step()
+    eng.step()                       # a few emitted tokens
+    e_short = eng.submit(short_p, 4, tier=0)
+    eng.step()                       # preemption pass evicts the decode
+
+    # mid-preemption: slot went to tier-0, snapshot pinned + hittable
+    assert eng.stats["preemptions"] == 1
+    (cont,) = [r for r in eng.scheduler.queued_requests()
+               if r.rid == e_long]
+    snap = tuple(int(t) for t in cont.tokens[:-1])
+    assert eng._preempt_holds.get(e_long) is not None
+    hold = eng._preempt_holds[e_long]
+    assert eng.pool.meta[hold].refs >= 1     # pinned: unevictable
+    assert eng.pool.has(snap)
+    hits_before = eng.stats["prefix_hits"]
+
+    fin = eng.run([])
+    by = {f.request.rid: f for f in fin}
+    assert by[e_long].preemptions == 1
+    np.testing.assert_array_equal(by[e_long].tokens, ref_by[r_long])
+    np.testing.assert_array_equal(by[e_short].tokens, ref_by[r_short])
+    # re-admission hit the pinned snapshot: one-token suffix replay
+    assert eng.stats["prefix_hits"] > hits_before
+    assert eng.stats["prefix_hit_tokens"] >= len(snap)
+    assert eng.stats["replayed_tokens"] >= 1
+    assert eng.traces["decode"] == 1         # contract survives
+    # holds drained, entry still resident and hittable for later reuse
+    assert not eng._preempt_holds
+    assert all(m.refs == 0 for m in eng.pool.meta.values())
+    assert eng.pool.has(snap)

@@ -1,0 +1,464 @@
+"""SLO scheduling tests: priority admission ordering, aging-based
+anti-starvation (property test over a 3-wave burst), the queued ->
+popped -> cancelled tombstone race and its free-slot accounting,
+preemption/continuation semantics, reserved headroom, victim selection,
+the empty-percentile regression, the scenario library, claim wiring in
+the serve grid, and engine-level preemption byte-identity + slot
+autoscaling.
+
+Scheduler-policy tests run against a fake cache (no model, no jit) so
+the policy surface is cheap to sweep; the engine tests at the bottom
+use the usual reduced qwen3-14b.
+"""
+
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.serve.report import (_pct, SCENARIO_LIBRARY,  # noqa: E402
+                                bursty_tier_traffic,
+                                diurnal_tier_traffic,
+                                heavy_tail_tier_traffic, scenario_waves)
+from repro.serve.scheduler import (PriorityScheduler,  # noqa: E402
+                                   Request, RequestScheduler, TierSLO,
+                                   normalize_slos)
+
+
+class FakeCache:
+    """SlotCache stand-in: slot pool + capacity check, no device state."""
+
+    def __init__(self, slots=4, capacity=256):
+        self.slots = slots
+        self.capacity = capacity
+        self._free = list(range(slots))
+
+    @property
+    def free_slots(self):
+        return len(self._free)
+
+    def acquire(self):
+        return self._free.pop(0) if self._free else None
+
+    def release(self, slot):
+        assert slot not in self._free
+        self._free.append(slot)
+
+    def fits(self, prompt_len, max_new_tokens):
+        return prompt_len + max_new_tokens <= self.capacity
+
+
+def _req(rid, tier=0, plen=8, max_new=4):
+    return Request(rid=rid, tokens=np.arange(1, plen + 1, dtype=np.int32),
+                   max_new_tokens=max_new, tier=tier)
+
+
+def _flat(groups):
+    """pop_admissions groups -> [(slot, rid)] in admission order."""
+    out = []
+    for _, group in sorted(groups.items()):
+        out.extend((slot, req.rid) for slot, req, _ in group)
+    return out
+
+
+def _prio(cache, **kw):
+    kw.setdefault("slos", {0: TierSLO(0.05, 2.0), 1: TierSLO(5.0, 60.0)})
+    return PriorityScheduler(cache, **kw)
+
+
+# ---------------------------------------------------- admission ordering
+
+def test_priority_admission_orders_by_tier_then_seq():
+    sched = _prio(FakeCache(slots=4))
+    for rid, tier in [(0, 1), (1, 0), (2, 1), (3, 0)]:
+        sched.submit(_req(rid, tier=tier), now=0.0)
+    order = [rid for _, rid in _flat(sched.pop_admissions(now=0.0))]
+    assert order == [1, 3, 0, 2]      # tier-0s first, FIFO within tier
+
+
+def test_fifo_scheduler_ignores_tiers():
+    sched = RequestScheduler(FakeCache(slots=4))
+    for rid, tier in [(0, 1), (1, 0), (2, 1), (3, 0)]:
+        sched.submit(_req(rid, tier=tier), now=0.0)
+    order = [rid for _, rid in _flat(sched.pop_admissions(now=0.0))]
+    assert order == [0, 1, 2, 3]
+
+
+def test_reserve_slots_blocks_low_tiers_not_tier0():
+    sched = _prio(FakeCache(slots=2), reserve_slots=1)
+    sched.submit(_req(0, tier=1), now=0.0)
+    sched.submit(_req(1, tier=1), now=0.0)
+    # tier-1 may not take the last free slot
+    assert [r for _, r in _flat(sched.pop_admissions(now=0.0))] == [0]
+    assert sched.cache.free_slots == 1
+    sched.submit(_req(2, tier=0), now=0.0)
+    # ... but tier-0 always can
+    assert [r for _, r in _flat(sched.pop_admissions(now=0.0))] == [2]
+    assert sched.cache.free_slots == 0
+    assert sched.slot_accounting_ok()
+
+
+def test_reserve_slots_validation():
+    with pytest.raises(ValueError):
+        _prio(FakeCache(slots=2), reserve_slots=2)
+    with pytest.raises(ValueError):
+        _prio(FakeCache(slots=2), reserve_slots=-1)
+
+
+# ------------------------------------------------- aging anti-starvation
+
+def _flat_groups(groups):
+    out = []
+    for _, group in sorted(groups.items()):
+        out.extend(group)
+    return out
+
+
+@settings(deadline=None, max_examples=20)
+@given(aging_s=st.floats(min_value=0.2, max_value=2.0),
+       wave=st.integers(min_value=2, max_value=5))
+def test_aging_bounds_starvation_under_three_wave_burst(aging_s, wave):
+    """A tier-1 request under a sustained 3-wave tier-0 flood still gets
+    in: once it has waited ``aging_s`` its effective tier is 0 and its
+    seq (the oldest) wins FIFO-within-tier, so with one admission per
+    0.25*aging_s tick at most ~4 flood requests can ever precede it —
+    independent of how deep the flood is."""
+    cache = FakeCache(slots=1)
+    sched = _prio(cache, aging_s=aging_s,
+                  slos={0: TierSLO(0.05, 2.0), 1: TierSLO(5.0, 60.0)})
+    sched.submit(_req(100, tier=1, max_new=1), now=0.0)
+    rid = 0
+    for w in range(3):                # 3-wave burst of tier-0s
+        t = 0.6 * aging_s * w
+        for _ in range(wave):
+            sched.submit(_req(rid, tier=0, max_new=1), now=t)
+            rid += 1
+    admitted, now = [], 0.0
+    while sched.queued:
+        now += 0.25 * aging_s        # one admission per tick (1 slot)
+        for slot, req, _ in _flat_groups(sched.pop_admissions(now=now)):
+            assert sched.claim_popped(slot, req.rid)
+            admitted.append(req.rid)
+            sched.record(slot, 7, now)     # 1-token request: retires
+    assert 100 in admitted            # the starved request got in
+    assert admitted.index(100) <= 4, (
+        f"aged tier-1 request starved behind {admitted.index(100)} "
+        f"flood requests (admission order {admitted})")
+    assert sched.slot_accounting_ok()
+
+
+# -------------------------------------------- tombstone race + accounting
+
+def test_cancel_popped_slot_tombstone_releases_once():
+    """queued -> popped -> cancelled: the slot parks in limbo, the
+    accounting invariant holds throughout, and claim_popped releases it
+    exactly once."""
+    cache = FakeCache(slots=2)
+    sched = RequestScheduler(cache)
+    sched.submit(_req(0), now=0.0)
+    sched.submit(_req(1), now=0.0)
+    picked = _flat(sched.pop_admissions(now=0.0))
+    assert cache.free_slots == 0 and sched.slot_accounting_ok()
+    kind, slot0 = sched.cancel(0)     # popped but prefill not yet issued
+    assert kind == "popped" and slot0 == picked[0][0]
+    assert cache.free_slots == 0      # parked, NOT yet reusable
+    assert sched.slot_accounting_ok()
+    assert sched.claim_popped(picked[0][0], 0) is False   # tombstone
+    assert cache.free_slots == 1      # released exactly here
+    assert sched.slot_accounting_ok()
+    assert sched.claim_popped(picked[1][0], 1) is True
+    # double-cancel and unknown rid are no-ops
+    assert sched.cancel(0) == (None, None)
+    assert sched.cancel(999) == (None, None)
+    sched.record(picked[1][0], 5, now=1.0)
+    sched.record(picked[1][0], 5, now=1.0)
+    sched.record(picked[1][0], 5, now=1.0)
+    fin = sched.record(picked[1][0], 5, now=1.0)
+    assert fin.request.rid == 1
+    assert cache.free_slots == 2 and sched.slot_accounting_ok()
+
+
+# --------------------------------------------- preemption + continuation
+
+def test_preempt_requeues_continuation_at_front():
+    cache = FakeCache(slots=1)
+    sched = _prio(cache)
+    sched.submit(_req(0, tier=1, plen=4, max_new=5), now=0.0)
+    sched.submit(_req(1, tier=1, plen=4, max_new=5), now=0.0)
+    (slot, req, _), = _flat_groups(sched.pop_admissions(now=0.0))
+    assert sched.claim_popped(slot, req.rid)
+    sched.record(slot, 11, now=0.1)
+    sched.record(slot, 12, now=0.2)
+    cont = sched.preempt(slot, now=0.3)
+    assert cont.rid == 0
+    np.testing.assert_array_equal(
+        cont.tokens, np.concatenate([_req(0, plen=4).tokens,
+                                     np.asarray([11, 12], np.int32)]))
+    assert cont.max_new_tokens == 3
+    assert sched.queued_requests()[0].rid == 0     # ahead of rid 1
+    assert cache.free_slots == 1 and sched.slot_accounting_ok()
+    # re-admit and finish: FinishedRequest splices both attempts
+    (slot, req, _), = _flat_groups(sched.pop_admissions(now=0.4))
+    assert req.rid == 0 and sched.claim_popped(slot, req.rid)
+    for tok in (13, 14):
+        assert sched.record(slot, tok, now=0.5) is None
+    fin = sched.record(slot, 15, now=0.6)
+    assert fin.preemptions == 1
+    assert fin.request.max_new_tokens == 5         # the ORIGIN request
+    np.testing.assert_array_equal(fin.tokens, [11, 12, 13, 14, 15])
+    assert fin.first_token_time == 0.1             # first attempt's
+
+
+def test_preempt_before_issue_rejected():
+    sched = _prio(FakeCache(slots=1))
+    sched.submit(_req(0, tier=1), now=0.0)
+    (slot, req, _), = _flat_groups(sched.pop_admissions(now=0.0))
+    with pytest.raises(ValueError):
+        sched.preempt(slot, now=0.1)    # prefill not issued yet
+    assert slot in sched.active          # state restored
+    assert sched.slot_accounting_ok()
+
+
+def test_select_preemptions_prefers_lowest_priority_decoding_victim():
+    cache = FakeCache(slots=2)
+    sched = _prio(cache, slos={0: TierSLO(0.05, 2.0),
+                               1: TierSLO(5.0, 60.0),
+                               2: TierSLO(5.0, 60.0)})
+    sched.submit(_req(0, tier=1, max_new=5), now=0.0)
+    sched.submit(_req(1, tier=2, max_new=5), now=0.0)
+    by_rid = {req.rid: slot for slot, req, _ in
+              _flat_groups(sched.pop_admissions(now=0.0))}
+    for rid, slot in by_rid.items():
+        assert sched.claim_popped(slot, rid)
+        sched.record(slot, 9, now=0.01)           # decoding
+    sched.submit(_req(2, tier=0), now=0.1)
+    # waited 0.1 >= preempt_at(0.5) * ttft(0.05): at risk
+    assert sched.select_preemptions(now=0.2) == [by_rid[1]]   # tier 2
+    # a mid-prefill victim is never selected
+    assert sched.select_preemptions(
+        now=0.2, prefilling=frozenset(by_rid.values())) == []
+    # equal-or-higher-priority decodes are not victims for tier-1 risk
+    sched2 = _prio(FakeCache(slots=1))
+    sched2.submit(_req(0, tier=1, max_new=5), now=0.0)
+    (slot, req, _), = _flat_groups(sched2.pop_admissions(now=0.0))
+    assert sched2.claim_popped(slot, req.rid)
+    sched2.record(slot, 9, now=0.01)
+    sched2.submit(_req(1, tier=1), now=0.0)
+    assert sched2.select_preemptions(now=100.0) == []
+
+
+def test_normalize_slos_and_validation():
+    slos = normalize_slos({0: 0.05, 1: (5.0, 60.0), 2: TierSLO(1.0)})
+    assert slos[0] == TierSLO(0.05)
+    assert slos[1] == TierSLO(5.0, 60.0)
+    assert slos[2].latency_s == float("inf")
+    with pytest.raises(ValueError):
+        TierSLO(0.0)
+    with pytest.raises(ValueError):
+        _prio(FakeCache(), slos={}, )
+
+
+# ------------------------------------------------- empty-percentile row
+
+def test_pct_empty_class_reports_explicit_zero_row():
+    row = _pct([])
+    assert row == {"count": 0, "empty": True, "p50": None, "p90": None,
+                   "p99": None, "mean": None, "max": None}
+    full = _pct([1.0, 2.0, 3.0])
+    assert full["count"] == 3 and "empty" not in full
+    assert full["p50"] == 2.0
+
+
+# ------------------------------------------------------ scenario library
+
+def test_scenario_library_shapes():
+    assert set(SCENARIO_LIBRARY) >= {"steady", "bursty", "diurnal",
+                                     "heavy_tail"}
+    for name in SCENARIO_LIBRARY:
+        (wave,) = scenario_waves(name, vocab=512, seed=3)
+        assert wave == sorted(wave, key=lambda t: t.at)
+        assert {t.tier for t in wave} == {0, 1}
+        assert all(0.0 <= t.at <= 1.0 for t in wave)
+        assert all(t.cls for t in wave)
+
+
+def test_bursty_traffic_pairs_and_burst_cluster():
+    (wave,) = bursty_tier_traffic(512, seed=1)
+    t0 = sorted(t.at for t in wave if t.tier == 0)
+    assert all(t0[i] == t0[i + 1] for i in range(0, len(t0), 2))  # pairs
+    t1 = [t.at for t in wave if t.tier == 1]
+    assert max(t1) - min(t1) < 0.1        # the flash crowd clusters
+    (steady,) = bursty_tier_traffic(512, steady=True, seed=1)
+    s1 = sorted(t.at for t in steady if t.tier == 1)
+    assert max(b - a for a, b in zip(s1, s1[1:])) < 0.2   # spread out
+
+
+def test_heavy_tail_prompt_lengths_zipf():
+    (wave,) = heavy_tail_tier_traffic(512, n=40, seed=5)
+    lens = [len(t.tokens) for t in wave]
+    assert min(lens) >= 1
+    # heavy tail: short prompts dominate but long ones exist
+    assert sorted(lens)[len(lens) // 2] < max(lens) // 2
+    assert any(t.tier == 0 for t in wave)
+    assert any(t.tier == 1 for t in wave)
+
+
+def test_diurnal_arrivals_cluster_at_peaks():
+    (wave,) = diurnal_tier_traffic(512, n=48, cycles=2, seed=7)
+    ats = np.sort([t.at for t in wave])
+    gaps = np.diff(ats)
+    assert gaps.max() > 3 * np.median(gaps[gaps > 0])   # rate modulation
+
+
+def test_scenario_waves_unknown_name():
+    with pytest.raises(ValueError):
+        scenario_waves("nope", 512)
+
+
+# ------------------------------------------------- serve grid claim wiring
+
+def test_slo_claims_from_synthetic_rows():
+    from repro.experiments.serve_grid import (ServeCellSpec,
+                                              get_serve_grid, slo_claims)
+    grid = get_serve_grid("serve_slo_smoke")
+
+    def row(p99, preempt=0, traces=1):
+        return {"by_class": {"tier0_interactive": {
+                    "ttft": {"p99": p99}}},
+                "preemptions": preempt, "decode_traces": traces}
+
+    def cid(scen, sched):
+        return ServeCellSpec(grid.name, scen, sched,
+                             grid.claim_slots).cell_id
+
+    rows = {cid("bursty", "priority"): row(0.04, preempt=2),
+            cid("steady", "priority"): row(0.03),
+            cid("bursty", "fifo"): row(0.20),
+            cid("steady", "fifo"): row(0.03)}
+    claims = slo_claims(grid, rows)
+    assert claims["A1_priority_burst_ttft_le_2x_steady"]
+    assert claims["A2_fifo_burst_ttft_ge_4x_steady"]
+    assert claims["A3_priority_preempts_under_burst"]
+    assert claims["contract_one_decode_trace_per_cell"]
+    assert claims["priority_burst_over_steady_x"] == pytest.approx(1.333,
+                                                                   abs=1e-3)
+    rows[cid("bursty", "priority")] = row(0.08, preempt=0, traces=2)
+    claims = slo_claims(grid, rows)
+    assert not claims["A1_priority_burst_ttft_le_2x_steady"]
+    assert not claims["A3_priority_preempts_under_burst"]
+    assert not claims["contract_one_decode_trace_per_cell"]
+
+
+def test_serve_grid_engine_kwargs_by_scheduler():
+    from repro.experiments.serve_grid import ServeCellSpec, get_serve_grid
+    grid = get_serve_grid("serve_slo_smoke")
+    pri = grid.engine_kwargs(ServeCellSpec(grid.name, "bursty",
+                                           "priority", 4))
+    assert pri["slos"][0].ttft_s == grid.slos[0][1]
+    assert pri["reserve_slots"] == grid.reserve_slots
+    fifo = grid.engine_kwargs(ServeCellSpec(grid.name, "bursty",
+                                            "fifo", 4))
+    assert "slos" not in fifo and "reserve_slots" not in fifo
+    with pytest.raises(ValueError):
+        ServeCellSpec(grid.name, "bursty", "lifo", 4)
+    auto = grid.engine_kwargs(ServeCellSpec(grid.name, "bursty",
+                                            "priority", 4, min_slots=2))
+    assert auto["min_slots"] == 2
+
+
+# ----------------------------------------------------- engine-level tests
+
+def _model():
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    if "m" not in _model.__dict__:
+        cfg = get_config("qwen3-14b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(1))
+        _model.m = (cfg, model, params)
+    return _model.m
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, (l,)).astype(np.int32)
+            for l in lens]
+
+
+SLOS = {0: TierSLO(1e-6, 10.0), 1: TierSLO(10.0, 60.0)}
+
+
+def test_engine_preemption_byte_identical_and_one_trace():
+    """slots=1: a tier-0 arrival evicts the decoding tier-1 request;
+    both token streams stay byte-identical to the no-preemption FIFO
+    engine run of the SAME submissions, and the decode step still
+    traced exactly once."""
+    from repro.serve import ServeEngine
+    cfg, model, params = _model()
+    long_p, short_p = _prompts(cfg, [9, 6], seed=21)
+
+    ref = ServeEngine(model, params, cfg, slots=1, capacity=64, seed=7)
+    r0 = ref.submit(long_p, 10, tier=1)
+    r1 = ref.submit(short_p, 4, tier=0)
+    ref_by = {f.request.rid: f.tokens for f in ref.run([])}
+
+    eng = ServeEngine(model, params, cfg, slots=1, capacity=64, seed=7,
+                      slos=SLOS)
+    e0 = eng.submit(long_p, 10, tier=1)
+    eng.step()                        # admit + prefill tier-1
+    for _ in range(3):
+        eng.step()                    # a few decode tokens
+    e1 = eng.submit(short_p, 4, tier=0)
+    fin = eng.run([])
+    by = {f.request.rid: f for f in fin}
+    assert by[e0].preemptions >= 1    # tier-1 was evicted
+    assert eng.stats["preemptions"] >= 1
+    np.testing.assert_array_equal(by[e0].tokens, ref_by[r0])
+    np.testing.assert_array_equal(by[e1].tokens, ref_by[r1])
+    assert eng.traces["decode"] == 1
+    assert eng.cache.free_slots == 1
+    assert eng.scheduler.slot_accounting_ok()
+
+
+def test_engine_preemption_disabled_flag():
+    from repro.serve import ServeEngine
+    cfg, model, params = _model()
+    long_p, short_p = _prompts(cfg, [9, 6], seed=21)
+    eng = ServeEngine(model, params, cfg, slots=1, capacity=64, seed=7,
+                      slos=SLOS, preempt=False)
+    e0 = eng.submit(long_p, 10, tier=1)
+    eng.step()
+    for _ in range(3):
+        eng.step()
+    eng.submit(short_p, 4, tier=0)
+    fin = eng.run([])
+    assert eng.stats["preemptions"] == 0
+    assert {f.request.rid: f.preemptions for f in fin}[e0] == 0
+
+
+def test_engine_autoscale_ramps_and_decays():
+    from repro.serve import ServeEngine
+    cfg, model, params = _model()
+    eng = ServeEngine(model, params, cfg, slots=4, capacity=64, seed=7,
+                      min_slots=1)
+    assert eng._slot_target == 1
+    for p in _prompts(cfg, [5, 5, 5, 5], seed=3):
+        eng.submit(p, 6)
+    eng.step()
+    assert len(eng.scheduler.active) <= 2     # target ramped 1 -> 2
+    ramped = []
+    while eng.scheduler.has_work():
+        eng.step()
+        ramped.append(eng._slot_target)
+    assert max(ramped) > 1                    # queue pressure grew it
+    for _ in range(8):
+        eng.step()                            # idle: decay to the floor
+    assert eng._slot_target == 1
+    assert eng.stats["ticks"] > 0
+    with pytest.raises(ValueError):
+        ServeEngine(model, params, cfg, slots=4, capacity=64,
+                    min_slots=9)
