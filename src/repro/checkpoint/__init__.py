@@ -2,4 +2,5 @@
 TrainState (params + packed opt slots + step) for resumable runs."""
 
 from repro.checkpoint.npz import (save_checkpoint, restore_checkpoint,  # noqa: F401
-                                  save_train_state, restore_train_state)
+                                  clone_checkpoint, save_train_state,
+                                  restore_train_state)

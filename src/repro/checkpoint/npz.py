@@ -139,6 +139,22 @@ def save_train_state(path: str, state: Any) -> None:
     save_checkpoint(path, state)
 
 
+def clone_checkpoint(src: str, dst: str) -> None:
+    """Atomically copy a checkpoint file (the PBT exploit path: a
+    top-quartile cell's ``state.npz`` becomes a bottom-quartile cell's
+    restart point). Copy-to-tmp + rename, so a kill mid-clone can never
+    leave a torn npz in the target directory."""
+    import shutil
+    if not src.endswith(".npz"):
+        src = src + ".npz"
+    if not dst.endswith(".npz"):
+        dst = dst + ".npz"
+    os.makedirs(os.path.dirname(dst) or ".", exist_ok=True)
+    tmp = dst + ".tmp.npz"
+    shutil.copyfile(src, tmp)
+    os.replace(tmp, dst)
+
+
 def restore_train_state(path: str, template: Any) -> Any:
     """Restore a TrainState into ``template``'s structure.
 

@@ -9,7 +9,11 @@ The declarative pipeline the repo's studies report through:
   in-jit trust-ratio telemetry, warm-started compilation, and
   mid-grid/mid-cell resume via npz checkpoints (+ token-iterator
   fast-forward for LM cells);
-* :mod:`repro.experiments.record` — streamed JSONL trajectories;
+* :mod:`repro.experiments.record` — streamed JSONL trajectories
+  (strict JSON: non-finite -> null + a ``diverged`` flag);
+* :mod:`repro.experiments.controller` — the PBT population controller
+  (round-robin step slices, kill/early-stop/exploit/explore over the
+  runner's segment + checkpoint machinery);
 * :mod:`repro.experiments.report` — accuracy-vs-batch (CNN) /
   perplexity-vs-batch (LM) aggregation + the studies' claim checks
   (``EXPERIMENTS_<study>.json``);
@@ -18,11 +22,13 @@ The declarative pipeline the repo's studies report through:
 """
 
 from repro.experiments.spec import (CellSpec, GridSpec, GRIDS,  # noqa: F401
-                                    get_grid)
+                                    cell_from_json, get_grid)
 from repro.experiments.runner import GridRunner  # noqa: F401
 from repro.experiments.record import (TrajectoryRecorder,  # noqa: F401
                                       read_trajectory)
+from repro.experiments.controller import PopulationController  # noqa: F401
 from repro.experiments.report import (aggregate, format_table,  # noqa: F401
+                                      pbt_section, write_pbt_report,
                                       write_report)
 from repro.experiments.serve_grid import (SERVE_GRIDS,  # noqa: F401
                                           ServeCellSpec, ServeGridSpec,

@@ -27,15 +27,20 @@ layer-wise-vs-generic claim checks at matched batch:
 
 from __future__ import annotations
 
+import os
 import statistics
 from typing import Optional
 
-from repro.experiments.record import atomic_write_json
-from repro.experiments.spec import GridSpec
+from repro.experiments.record import (atomic_write_json, load_json,
+                                      read_trajectory)
+from repro.experiments.spec import GridSpec, cell_from_json
 
 
-def _mean(vals: list[float]) -> float:
-    return round(statistics.fmean(vals), 4)
+def _mean(vals: list) -> Optional[float]:
+    """Replicate-seed mean; ``None`` entries (a diverged cell's nulled
+    metric) are skipped rather than poisoning the aggregate."""
+    vals = [v for v in vals if v is not None]
+    return round(statistics.fmean(vals), 4) if vals else None
 
 
 # Per-family metric schema: (table key, row metric columns, the headline
@@ -81,7 +86,8 @@ def aggregate(grid: GridSpec, manifest: dict) -> dict:
     table: dict[str, dict[str, dict[str, float]]] = {}
     for (opt, batch), group in sorted(by_cell.items(),
                                       key=lambda kv: (kv[0][1], kv[0][0])):
-        entry = {col: _mean([r[col] for r in group]) for col in columns}
+        entry = {col: _mean([r.get(col) for r in group])
+                 for col in columns}
         entry["replicates"] = len(group)
         table.setdefault(str(batch), {})[opt] = entry
 
@@ -105,12 +111,17 @@ def aggregate(grid: GridSpec, manifest: dict) -> dict:
 def _cnn_claims(table: dict) -> dict:
     out: dict = {}
     batches = sorted(int(b) for b in table)
+    # a claim needs both optimizers present with a NON-None metric (a
+    # fully-diverged replicate group aggregates to None — skip, don't
+    # crash the report)
+    t = lambda b, o, k: table[str(b)][o].get(k)  # noqa: E731
     both = [b for b in batches
-            if {"sgd", "lars"} <= set(table[str(b)])]
+            if {"sgd", "lars"} <= set(table[str(b)])
+            and t(b, "lars", "test_acc") is not None
+            and t(b, "sgd", "test_acc") is not None]
     if not both:
         return out
     small, large = both[0], both[-1]
-    t = lambda b, o, k: table[str(b)][o][k]  # noqa: E731
     out["smallest_batch"] = small
     out["largest_batch"] = large
     out["C1_comparable_at_small_batch"] = bool(
@@ -120,11 +131,11 @@ def _cnn_claims(table: dict) -> dict:
     out["sgd_test_acc_at_largest"] = t(large, "sgd", "test_acc")
     out["C3_lars_ge_sgd_at_largest_batch"] = bool(
         t(large, "lars", "test_acc") >= t(large, "sgd", "test_acc"))
-    if small != large:
-        sgd_growth = t(large, "sgd", "gen_error") - t(small, "sgd",
-                                                      "gen_error")
-        lars_growth = t(large, "lars", "gen_error") - t(small, "lars",
-                                                        "gen_error")
+    gen_vals = (t(large, "sgd", "gen_error"), t(small, "sgd", "gen_error"),
+                t(large, "lars", "gen_error"), t(small, "lars", "gen_error"))
+    if small != large and None not in gen_vals:
+        sgd_growth = gen_vals[0] - gen_vals[1]
+        lars_growth = gen_vals[2] - gen_vals[3]
         out["C4_sgd_gen_error_grows_faster"] = bool(
             sgd_growth >= lars_growth)
     return out
@@ -145,8 +156,11 @@ LM_OPTS = ("lamb", "adamw", "lars", "sgd")
 def _lm_claims(table: dict) -> dict:
     out: dict = {}
     batches = sorted(int(b) for b in table)
-    ppl = lambda b, o: table[str(b)][o]["eval_ppl"]  # noqa: E731
-    has = lambda b, o: o in table[str(b)]            # noqa: E731
+    ppl = lambda b, o: table[str(b)][o].get("eval_ppl")  # noqa: E731
+    # present AND non-None (diverged replicate groups drop out of the
+    # claims instead of crashing them)
+    has = lambda b, o: (o in table[str(b)]               # noqa: E731
+                        and ppl(b, o) is not None)
     # comparability is judged where >= 2 optimizers coexist
     multi = [b for b in batches
              if sum(has(b, o) for o in LM_OPTS) >= 2]
@@ -199,8 +213,10 @@ def _parity_claims(table: dict, headline: str, lower_better: bool) -> dict:
             base = label[:-len("@int8")]
             if base not in cells:
                 continue
-            f32_v = cells[base][headline]
-            q8_v = cells[label][headline]
+            f32_v = cells[base].get(headline)
+            q8_v = cells[label].get(headline)
+            if f32_v is None or q8_v is None:
+                continue
             if lower_better:
                 ok = q8_v <= f32_v * (1.0 + PARITY_PPL_RTOL)
             else:
@@ -218,6 +234,129 @@ def write_report(path: str, grid: GridSpec, manifest: dict,
     payload = aggregate(grid, manifest)
     if backend is not None:
         payload["backend"] = backend
+    existing = load_json(path)
+    if isinstance(existing, dict) and "pbt" in existing:
+        # a PBT study of the same report file rides along under its own
+        # key (see write_pbt_report) — a static-grid rerun refreshes the
+        # grid section without discarding it
+        payload["pbt"] = existing["pbt"]
+    atomic_write_json(path, payload)
+    return payload
+
+
+# -------------------------------------------------------- PBT reporting
+
+# "Tuned SGD closes the gap" bar: the same comparability tolerance the
+# static grid's C1 uses for the small-batch sanity check.
+PBT_GAP_ATOL = 0.05
+
+
+def pbt_section(grid: GridSpec, pbt: dict,
+                out_dir: Optional[str] = None) -> dict:
+    """PBT controller manifest -> the report's ``pbt`` block: per-member
+    outcome + hyperparameter schedule (the init/exploit event chain),
+    per-group best member with its loss curve and final tuned hypers,
+    and the tuned-gap claims (does the TUNED generic optimizer close the
+    large-batch gap the static grid shows?)."""
+    _, columns, headline, lower_better = FAMILY_METRICS[grid.family]
+    members_out: dict = {}
+    by_group: dict = {}
+    counts = {"exploit": 0, "kill": 0, "early_stop": 0}
+    for lineage in sorted(pbt["members"]):
+        m = pbt["members"][lineage]
+        cell = cell_from_json(m["cell"])
+        row = m.get("row") or {}
+        # the lineage's hyperparameter schedule: every point where its
+        # effective (base_lr, trust_coef) changed, lineage-tagged
+        schedule = [{"round": e.get("round"), "step": e.get("step"),
+                     "event": e["event"], "from": e.get("from"),
+                     "generation": e.get("generation", 0),
+                     "base_lr": e.get("base_lr"),
+                     "trust_coef": e.get("trust_coef")}
+                    for e in m.get("events", ())
+                    if e["event"] in ("init", "exploit")]
+        for e in m.get("events", ()):
+            if e["event"] in counts:
+                counts[e["event"]] += 1
+        entry = {"cell_id": cell.cell_id, "status": m["status"],
+                 "reason": m.get("reason"), "steps": m.get("step", 0),
+                 "generation": cell.generation,
+                 "base_lr": cell.cell_base_lr,
+                 "trust_coef": cell.cell_trust_coef,
+                 "schedule": schedule}
+        for col in ("loss",) + columns:
+            if col in row:
+                entry[col] = row[col]
+        members_out[lineage] = entry
+        by_group.setdefault((cell.optimizer, cell.batch),
+                            []).append((lineage, m, cell))
+
+    groups_out: dict = {}
+    for (opt, batch), group in sorted(by_group.items()):
+        done = [(lin, m, c) for lin, m, c in group
+                if m["status"] == "done"
+                and (m.get("row") or {}).get(headline) is not None]
+        g = {"members": len(group), "finished": len(done),
+             "killed": sum(m["status"] == "killed" for _, m, _ in group),
+             "early_stopped": sum(m["status"] == "early_stopped"
+                                  for _, m, _ in group)}
+        if done:
+            pick = min if lower_better else max
+            lin, m, cell = pick(done, key=lambda t: t[1]["row"][headline])
+            best = {"lineage": lin, "cell_id": cell.cell_id,
+                    "generation": cell.generation,
+                    "base_lr": cell.cell_base_lr,
+                    "trust_coef": cell.cell_trust_coef,
+                    headline: m["row"][headline]}
+            if out_dir is not None:
+                traj = os.path.join(out_dir, lin, "trajectory.jsonl")
+                if os.path.exists(traj):
+                    best["loss_curve"] = [
+                        r.get("loss") for r in read_trajectory(traj)
+                        if "event" not in r]
+            g["best"] = best
+        groups_out[f"{opt}-b{batch}"] = g
+
+    # the controller's trust-coefficient map at run end (which eta each
+    # trust-ratio lineage converged to — the paper's sensitive knob)
+    trust_map = {lin: cell.cell_trust_coef
+                 for group in by_group.values()
+                 for lin, _m, cell in group
+                 if cell.optimizer in ("lars", "lamb")}
+
+    claims: dict = {}
+    for batch in sorted({b for (_, b) in by_group}):
+        lars = (groups_out.get(f"lars-b{batch}") or {}).get("best")
+        sgd = (groups_out.get(f"sgd-b{batch}") or {}).get("best")
+        if not (lars and sgd):
+            continue
+        gap = round(lars[headline] - sgd[headline], 4)
+        if lower_better:
+            gap = -gap
+        claims[f"b{batch}_best_lars_{headline}"] = lars[headline]
+        claims[f"b{batch}_best_tuned_sgd_{headline}"] = sgd[headline]
+        claims[f"b{batch}_gap"] = gap
+        claims[f"P1_tuned_sgd_closes_gap_b{batch}"] = bool(
+            gap <= PBT_GAP_ATOL)
+    return {"protocol": pbt.get("controller", {}),
+            "rounds": pbt.get("round", 0),
+            "events": counts, "members": members_out,
+            "groups": groups_out, "final_trust_coef": trust_map,
+            "claims": claims}
+
+
+def write_pbt_report(path: str, grid: GridSpec, pbt: dict,
+                     out_dir: Optional[str] = None,
+                     backend: Optional[str] = None) -> dict:
+    """Merge the PBT block into the study's report file UNDER its own
+    ``pbt`` key (the static grid's tables and claims in the same file
+    stay untouched — the serve report's merge discipline)."""
+    section = pbt_section(grid, pbt, out_dir=out_dir)
+    if backend is not None:
+        section["backend"] = backend
+    existing = load_json(path)
+    payload = existing if isinstance(existing, dict) else {}
+    payload["pbt"] = section
     atomic_write_json(path, payload)
     return payload
 

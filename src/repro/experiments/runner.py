@@ -56,7 +56,8 @@ from repro.core import grad_stats
 from repro.data import (TokenTaskConfig, batch_iterator, synthetic_mnist,
                         token_batches, token_eval_set)
 from repro.experiments.record import (TrajectoryRecorder, atomic_write_json,
-                                      load_json, truncate_trajectory)
+                                      load_json, read_trajectory,
+                                      truncate_trajectory)
 from repro.experiments.spec import CellSpec, GridSpec
 from repro.launch.mesh import mesh_from_spec
 from repro.models import build_model
@@ -119,8 +120,13 @@ class GridRunner:
     def manifest_path(self) -> str:
         return os.path.join(self.out_dir, "manifest.json")
 
-    def cell_dir(self, cell: CellSpec) -> str:
-        return os.path.join(self.out_dir, cell.cell_id)
+    def cell_dir(self, cell: CellSpec, dir_name: Optional[str] = None
+                 ) -> str:
+        """A cell's run directory. ``dir_name`` overrides the default
+        cell_id key: a PBT lineage keeps ONE directory (its
+        ``lineage_root``) across mutations even though its cell_id
+        grows a generation suffix."""
+        return os.path.join(self.out_dir, dir_name or cell.cell_id)
 
     def data(self):
         if self._data is None:
@@ -185,7 +191,8 @@ class GridRunner:
             stats_fn = None
             if self.collect_stats:
                 stats_fn = grad_stats.stats_hook(
-                    eta=cell.trust_coef, weight_decay=cell.weight_decay)
+                    eta=cell.cell_trust_coef,
+                    weight_decay=cell.weight_decay)
             self._pipelines[key] = TrainPipeline(
                 self.model, cell.build_optimizer(), self.cfg,
                 accum_steps=cell.accum_steps, precision=cell.precision,
@@ -218,9 +225,16 @@ class GridRunner:
 
     # ------------------------------------------------------------- cells
 
-    def run_cell(self, cell: CellSpec, *, resume: bool = False) -> dict:
-        """Train one cell to completion; returns its summary row."""
-        steps = cell.steps
+    def open_cell(self, cell: CellSpec, *, resume: bool = False,
+                  dir_name: Optional[str] = None) -> tuple:
+        """Initialize-or-restore a cell: returns ``(state, start)``.
+
+        With ``resume`` and a ``state.npz`` present, the full TrainState
+        is restored, the JSONL trajectory rewound to the checkpointed
+        step (contiguity-validated), and ``start`` is that step — which
+        may equal ``cell.steps`` when the kill landed between the final
+        training step and the manifest row. Without a checkpoint a
+        partial directory is wiped and the cell restarts."""
         eff_batch = self.eff_batch(cell)
         if eff_batch % cell.accum_steps:
             raise ValueError(
@@ -228,8 +242,7 @@ class GridRunner:
                 f"divisible by accum_steps={cell.accum_steps}")
         pipe = self.pipeline(cell)
         state = pipe.init_state(jax.random.key(cell.cell_seed()))
-
-        cdir = self.cell_dir(cell)
+        cdir = self.cell_dir(cell, dir_name)
         traj_path = os.path.join(cdir, "trajectory.jsonl")
         ckpt_path = os.path.join(cdir, "state.npz")
         start = 0
@@ -242,25 +255,58 @@ class GridRunner:
             assert kept == start, (
                 f"trajectory {traj_path} holds {kept} records below the "
                 f"checkpointed step {start} — corrupted run directory")
-            self.log(f"  resumed {cell.cell_id} at step {start}/{steps}")
+            self.log(f"  resumed {cell.cell_id} at step "
+                     f"{start}/{cell.steps}")
         elif os.path.isdir(cdir):
             shutil.rmtree(cdir)  # partial cell without checkpoint: redo
+        return state, start
 
-        recorder = TrajectoryRecorder(traj_path, append=start > 0)
-        it = self.cell_batches(cell, start=start)
+    def run_cell_segment(self, cell: CellSpec, state, *, start: int,
+                         until_step: int,
+                         dir_name: Optional[str] = None,
+                         checkpoint_at_end: Optional[bool] = None
+                         ) -> tuple:
+        """Advance one cell from ``start`` to ``min(until_step, steps)``,
+        streaming trajectory records; returns ``(state, metrics, batch)``
+        (the last step's — both empty when no step ran, i.e.
+        ``start >= until_step``).
 
-        t0 = t_prev = time.perf_counter()
+        This is the shared engine under :meth:`run_cell` (one segment to
+        completion) and the PBT controller (round-robin slices): the
+        recorder, periodic checkpointing, and the seeded-iterator
+        fast-forward live here exactly once. A checkpoint is saved at
+        the segment boundary (``checkpoint_at_end``, default on whenever
+        periodic checkpointing is on) so a controller can clone the
+        boundary state and a kill during finalization resumes at
+        ``start == steps`` instead of redoing the cell."""
+        steps = cell.steps
+        until = min(until_step, steps)
+        eff_batch = self.eff_batch(cell)
+        if checkpoint_at_end is None:
+            checkpoint_at_end = bool(self.checkpoint_every)
+        pipe = self.pipeline(cell)
+        cdir = self.cell_dir(cell, dir_name)
+        traj_path = os.path.join(cdir, "trajectory.jsonl")
+        ckpt_path = os.path.join(cdir, "state.npz")
         batch: dict = {}
         metrics: dict = {}
+        if start >= until:
+            return state, metrics, batch
+        recorder = TrajectoryRecorder(traj_path, append=start > 0)
+        it = self.cell_batches(cell, start=start)
+        t0 = t_prev = time.perf_counter()
         try:
-            for i in range(start, steps):
+            for i in range(start, until):
                 batch = next(it)
                 state, metrics = pipe(state, batch)
-                entry = {"step": i, "loss": float(metrics["loss"]),
+                loss = float(metrics["loss"])
+                entry = {"step": i, "loss": loss,
                          "aux_loss": float(metrics["aux_loss"])}
                 if self.grid.family == "lm":
-                    entry["ppl"] = round(math.exp(
-                        min(entry["loss"], 30.0)), 4)
+                    # a diverged loss propagates ppl=None (+ the
+                    # recorder's diverged flag), not exp(NaN)
+                    entry["ppl"] = (round(math.exp(min(loss, 30.0)), 4)
+                                    if math.isfinite(loss) else loss)
                 if "stats" in metrics:
                     entry["trust"] = grad_stats.summarize(metrics["stats"])
                 t_now = time.perf_counter()
@@ -274,21 +320,52 @@ class GridRunner:
                 t_prev = t_now
                 recorder.record(entry)
                 done = i + 1
-                if self.checkpoint_every and done < steps \
-                        and done % self.checkpoint_every == 0:
+                if (self.checkpoint_every
+                        and done % self.checkpoint_every == 0) \
+                        or (checkpoint_at_end and done == until):
                     save_train_state(ckpt_path, state)
                 self._tick()
         finally:
             recorder.close()
+        return state, metrics, batch
 
+    def finalize_cell(self, cell: CellSpec, state, metrics, batch, *,
+                      dir_name: Optional[str] = None,
+                      wall_s: float = 0.0,
+                      keep_checkpoint: bool = False) -> dict:
+        """Evaluate a completed cell and build its summary row.
+
+        When the cell resumed AT its final step (a kill landed between
+        the last training step and the manifest row), the training loop
+        never re-executed and ``metrics``/``batch`` are empty — the row
+        is recomputed from the restored state (evaluation) plus the last
+        trajectory record (final loss / trust summary) instead of
+        crashing on ``metrics["loss"]``."""
+        pipe = self.pipeline(cell)
+        cdir = self.cell_dir(cell, dir_name)
+        ckpt_path = os.path.join(cdir, "state.npz")
         row = dict(cell.to_json())
+        row["cell_id"] = cell.cell_id
         if pipe.mesh is not None:
             # the shared eval step is plain-jit: evaluate on gathered
             # host arrays rather than mesh-committed (ZeRO-sharded) ones
             state = jax.device_get(state)
         row.update(self._evaluate(cell, state))
-        row.update(steps=steps, loss=float(metrics["loss"]),
-                   wall_s=round(time.perf_counter() - t0, 1))
+        if metrics:
+            loss = float(metrics["loss"])
+        else:
+            recs = [r for r in read_trajectory(
+                os.path.join(cdir, "trajectory.jsonl")) if "event" not in r]
+            if len(recs) != cell.steps:
+                raise ValueError(
+                    f"cell {cell.cell_id}: cannot finalize — trajectory "
+                    f"holds {len(recs)} of {cell.steps} step records")
+            loss = recs[-1]["loss"]  # None when the final step diverged
+            if "trust" in recs[-1]:
+                row["trust_final"] = recs[-1]["trust"]
+        row.update(steps=cell.steps, loss=loss, wall_s=round(wall_s, 1))
+        if loss is None or not math.isfinite(loss):
+            row["diverged"] = True
         if "stats" in metrics:
             # full per-layer trust/norm table at the final step
             row["layer_stats"] = {
@@ -297,10 +374,23 @@ class GridRunner:
                 for layer, table in metrics["stats"].items()}
             row["trust_final"] = grad_stats.summarize(metrics["stats"])
         if self.record_memory:
+            if not batch:
+                # resumed-at-final-step path: the probe only needs the
+                # step's batch SHAPES, any stream position serves
+                batch = next(self.cell_batches(cell))
             row["peak_bytes"] = pipe.compiled_peak_bytes(batch)
-        if os.path.exists(ckpt_path):
+        if not keep_checkpoint and os.path.exists(ckpt_path):
             os.remove(ckpt_path)  # completed cells resume via manifest
         return row
+
+    def run_cell(self, cell: CellSpec, *, resume: bool = False) -> dict:
+        """Train one cell to completion; returns its summary row."""
+        t0 = time.perf_counter()
+        state, start = self.open_cell(cell, resume=resume)
+        state, metrics, batch = self.run_cell_segment(
+            cell, state, start=start, until_step=cell.steps)
+        return self.finalize_cell(cell, state, metrics, batch,
+                                  wall_s=time.perf_counter() - t0)
 
     # --------------------------------------------------------- evaluation
 

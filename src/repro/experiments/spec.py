@@ -113,12 +113,22 @@ class CellSpec:
     # with its replicated twin and placement is the ONLY varying
     # ingredient.
     zero: bool = False
+    # --- PBT mutable-hyperparam coordinates (experiments/controller) ---
+    # The population controller tunes the family base LR and the trust
+    # coefficient MID-RUN: a mutation sets mut_base_lr / mut_trust_coef
+    # (0.0 = unset, the grid's static values apply) and bumps
+    # ``generation``. All three are lineage tags — cell_id carries the
+    # generation suffix so mutated rows are distinguishable, cell_seed
+    # EXCLUDES them (a mutated cell continues its lineage's init + data
+    # stream; the hyperparameters are the only varying ingredient).
+    generation: int = 0
+    mut_base_lr: float = 0.0
+    mut_trust_coef: float = 0.0
 
     @property
-    def cell_id(self) -> str:
-        """Stable directory/manifest key, e.g. ``lars-b2048-f32-a1-none-s0``
-        (non-default lr schedules append their tag so ablation cells get
-        distinct directories)."""
+    def lineage_root(self) -> str:
+        """The cell id WITHOUT the PBT generation suffix — the stable
+        run-directory key a population member keeps across mutations."""
         base = (f"{self.optimizer}-b{self.batch}-{self.precision}"
                 f"-a{self.accum_steps}-{self.lr_policy}-s{self.seed}")
         if self.lr_schedule != "inverse_time":
@@ -129,6 +139,16 @@ class CellSpec:
             base += f"-m{self.mesh}"
         if self.zero:
             base += "-zero"
+        return base
+
+    @property
+    def cell_id(self) -> str:
+        """Stable directory/manifest key, e.g. ``lars-b2048-f32-a1-none-s0``
+        (non-default lr schedules append their tag so ablation cells get
+        distinct directories; PBT lineages append their generation)."""
+        base = self.lineage_root
+        if self.generation:
+            base += f"-g{self.generation}"
         return base
 
     def cell_seed(self) -> int:
@@ -156,13 +176,32 @@ class CellSpec:
 
     @property
     def cell_base_lr(self) -> float:
-        """The optimizer-family base LR this cell scales from."""
+        """The optimizer-family base LR this cell scales from. A PBT
+        mutation (mut_base_lr > 0) overrides every static source."""
+        if self.mut_base_lr:
+            return float(self.mut_base_lr)
         for name, lr in self.base_lr_overrides:
             if name == self.optimizer:
                 return float(lr)
         if self.optimizer in ("lamb", "adamw"):
             return self.adam_base_lr
         return self.base_lr
+
+    @property
+    def cell_trust_coef(self) -> float:
+        """The effective trust coefficient (PBT mutation wins)."""
+        return float(self.mut_trust_coef or self.trust_coef)
+
+    def perturbed(self, *, base_lr: float,
+                  trust_coef: Optional[float] = None) -> "CellSpec":
+        """The next generation of this lineage: explicit mutated
+        hyperparameters, generation bumped. Seed-relevant coordinates
+        are untouched, so the mutant continues the same data stream."""
+        return dataclasses.replace(
+            self, generation=self.generation + 1,
+            mut_base_lr=float(base_lr),
+            mut_trust_coef=(float(trust_coef) if trust_coef is not None
+                            else self.mut_trust_coef))
 
     def make_lr_schedule(self):
         """The cell's LR schedule: batch-size scaling of the family base
@@ -200,7 +239,7 @@ class CellSpec:
             return get_optimizer("lars", learning_rate=lr,
                                  momentum=self.momentum,
                                  weight_decay=self.weight_decay,
-                                 trust_coefficient=self.trust_coef,
+                                 trust_coefficient=self.cell_trust_coef,
                                  slot_dtype=self.opt_state_dtype)
         if self.optimizer == "lamb":
             return get_optimizer("lamb", learning_rate=lr,
@@ -224,13 +263,29 @@ class CellSpec:
                 tuple(map(tuple, self.base_lr_overrides)), self.family,
                 self.seq_len, self.vocab_size, self.model_layers,
                 self.model_d_model, self.epochs, self.n_train,
-                self.mesh, self.zero)
+                self.mesh, self.zero,
+                # mutated hypers are traced constants (the LR schedule
+                # closure, the trust coefficient) — a mutant needs its
+                # own compiled step
+                self.mut_base_lr, self.mut_trust_coef)
 
     def to_json(self) -> dict:
         """JSON-normalized (tuples -> lists) so in-memory manifest rows
         compare equal to rows loaded back from disk."""
         import json
         return json.loads(json.dumps(dataclasses.asdict(self)))
+
+
+def cell_from_json(row: dict) -> CellSpec:
+    """Rebuild a :class:`CellSpec` from its ``to_json`` form (the PBT
+    controller persists mutated cells in its manifest and reconstructs
+    them on resume). Extra row keys (metrics) are ignored; list-encoded
+    tuples are restored."""
+    fields = {f.name for f in dataclasses.fields(CellSpec)}
+    kw = {k: v for k, v in row.items() if k in fields}
+    kw["base_lr_overrides"] = tuple(
+        tuple(p) for p in kw.get("base_lr_overrides", ()))
+    return CellSpec(**kw)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -411,6 +466,22 @@ GRIDS: dict[str, GridSpec] = {
         lr_policies=("linear",), trust_coef=0.02,
         epochs=8, n_train=2048, n_test=512,
         mesh="8x1", zero=True),
+    # The population-based-training smoke study (experiments/controller):
+    # LARS and SGD POPULATIONS at the large batch — 4 members per
+    # optimizer (the seeds axis = member slots), each initialized with a
+    # controller-jittered base LR / trust coefficient around the grid
+    # values, then tuned mid-run by exploit/explore over the shared
+    # mid-cell checkpoint machinery. Answers the Nado et al. question at
+    # a fraction of full-grid cost: does TUNED SGD close the b1024 gap
+    # to LARS that the static grid shows? The pbt report block merges
+    # into the lars_vs_sgd study file next to the static-grid claims.
+    "pbt_smoke": GridSpec(
+        name="pbt_smoke",
+        batches=(1024,),
+        lr_policies=("linear",), trust_coef=0.02,
+        seeds=(0, 1, 2, 3),
+        epochs=8, n_train=2048, n_test=512,
+        report_name="EXPERIMENTS_lars_vs_sgd.json"),
     # The warmup ablation as grid cells (ROADMAP item): the large-batch
     # SGD cell with and without linear warmup under poly decay, LARS
     # alongside — does warmup rescue the scaled-LR collapse?

@@ -17,6 +17,12 @@ Examples::
   PYTHONPATH=src python -m repro.launch.experiment --grid lars_vs_sgd \
       --cell lars-b8192-f32-a1-linear-s0
 
+  # the grid as a PBT population (experiments/controller): the seeds
+  # axis becomes member slots, base_lr/trust_coef are tuned mid-run by
+  # exploit/explore; the pbt block merges into the study's report file
+  PYTHONPATH=src python -m repro.launch.experiment --grid pbt_smoke \
+      --pbt --population 4 --exploit-every 4
+
 The run directory (``--out-dir``, default ``runs/<grid>``) holds the
 manifest and one JSONL trajectory per cell; the aggregated report
 (metric-vs-batch table + claim checks) is written to ``--out`` (default:
@@ -32,7 +38,8 @@ import sys
 
 import jax
 
-from repro.experiments import (GRIDS, GridRunner, format_table, get_grid,
+from repro.experiments import (GRIDS, GridRunner, PopulationController,
+                               format_table, get_grid, write_pbt_report,
                                write_report)
 
 
@@ -70,6 +77,18 @@ def main(argv=None) -> int:
                     help="override the grid's replicate seeds")
     ap.add_argument("--seq-len", type=int, default=None,
                     help="override an LM grid's training sequence length")
+    ap.add_argument("--pbt", action="store_true",
+                    help="run the grid as a PBT population: the seeds "
+                    "axis becomes member slots and the controller tunes "
+                    "base_lr/trust_coef mid-run via exploit/explore")
+    ap.add_argument("--population", type=int, default=None,
+                    help="PBT members per (optimizer, batch) group "
+                    "(sets the grid's seeds axis to 0..N-1)")
+    ap.add_argument("--exploit-every", type=int, default=4,
+                    help="PBT round length in optimizer steps")
+    ap.add_argument("--pbt-seed", type=int, default=0,
+                    help="controller rng seed (init jitter + "
+                    "exploit/explore perturbations)")
     args = ap.parse_args(argv)
 
     if args.list_grids:
@@ -83,6 +102,10 @@ def main(argv=None) -> int:
         ap.error("--grid is required (or --list-grids)")
 
     overrides = {}
+    if args.population is not None:
+        if not args.pbt:
+            ap.error("--population requires --pbt")
+        overrides["seeds"] = tuple(range(args.population))
     if args.epochs is not None:
         overrides["epochs"] = args.epochs
     if args.n_train is not None:
@@ -103,6 +126,43 @@ def main(argv=None) -> int:
     runner = GridRunner(grid, out_dir,
                         checkpoint_every=args.checkpoint_every,
                         collect_stats=not args.no_stats)
+
+    if args.pbt:
+        ctl = PopulationController(runner,
+                                   exploit_every=args.exploit_every,
+                                   seed=args.pbt_seed)
+        print(f"# pbt {grid.name}: {len(grid.cells())} members -> "
+              f"{out_dir} (backend={jax.default_backend()})")
+        interrupted = False
+        try:
+            pbt = ctl.run(resume=args.resume)
+        except KeyboardInterrupt:
+            from repro.experiments.record import load_json
+            pbt = load_json(ctl.manifest_path)
+            interrupted = True
+            print("interrupted — rerun with --resume to continue",
+                  flush=True)
+        payload = write_pbt_report(out, grid, pbt, out_dir=out_dir,
+                                   backend=jax.default_backend())
+        section = payload["pbt"]
+        done = sum(m["status"] == "done"
+                   for m in section["members"].values())
+        print(f"# pbt report ({done}/{len(section['members'])} members "
+              f"finished, {section['events']['exploit']} exploits, "
+              f"{section['events']['kill']} kills, "
+              f"{section['events']['early_stop']} early-stops) -> {out}")
+        for name, g in section["groups"].items():
+            best = g.get("best")
+            if best:
+                metric = next(v for k, v in best.items()
+                              if k.endswith(("test_acc", "eval_ppl")))
+                print(f"  {name}: best {best['cell_id']} "
+                      f"(lr {best['base_lr']:.4g}, trust "
+                      f"{best['trust_coef']:.4g}) -> {metric}")
+        for key, val in section["claims"].items():
+            print(f"claim pbt.{key}: {val}")
+        return 130 if interrupted else 0
+
     print(f"# grid {grid.name}: {len(grid.cells())} cells -> {out_dir} "
           f"(backend={jax.default_backend()})")
     interrupted = False
